@@ -1,0 +1,125 @@
+"""Benchmarks mirroring the paper's evaluation (§6 + the CUDA tables)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, reps=3, **kw):
+    fn(*args, **kw)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def bench_maxflow(rows):
+    """Paper §4: push-relabel on grid graphs (vision-scale sizes)."""
+    from repro.core.maxflow.grid import GridProblem, maxflow_grid
+    from repro.core.maxflow.ref import random_grid_problem
+    rng = np.random.default_rng(0)
+    for hw in (32, 64, 128, 256):
+        cap, cs, ct = random_grid_problem(rng, hw, hw, max_cap=20,
+                                          terminal_density=0.3)
+        prob = GridProblem(jnp.asarray(cap), jnp.asarray(cs),
+                           jnp.asarray(ct))
+        res = maxflow_grid(prob)
+        us = _time(maxflow_grid, prob, reps=2)
+        rows.append((f"maxflow_grid_{hw}x{hw}", us,
+                     f"flow={float(res.flow):.0f};rounds={int(res.rounds)};"
+                     f"Mnode_rounds_per_s="
+                     f"{hw*hw*int(res.rounds)/us:.1f}"))
+
+
+def bench_assignment(rows):
+    """Paper §6: n<=30, costs<=100, ~1/20 s on a GTX 560 Ti."""
+    from repro.core.assignment.cost_scaling import solve_assignment
+    rng = np.random.default_rng(0)
+    for n in (10, 30, 64, 128, 256):
+        w = jnp.asarray(rng.integers(0, 101, (n, n)), jnp.int32)
+        for method in ("pushrelabel", "auction"):
+            res = solve_assignment(w, method=method)
+            us = _time(solve_assignment, w, method=method)
+            note = ""
+            if n == 30:
+                note = f";paper_50000us_speedup={50_000/us:.1f}x"
+            rows.append((f"assignment_{method}_n{n}", us,
+                         f"ops={int(res.pushes)+int(res.relabels)};"
+                         f"rounds={int(res.rounds)}" + note))
+
+
+def bench_refine_ops(rows):
+    """Operation-count scaling (the paper analyzes O(n^2 m) op bounds)."""
+    from repro.core.assignment.cost_scaling import solve_assignment
+    rng = np.random.default_rng(1)
+    prev = None
+    for n in (16, 32, 64, 128):
+        w = jnp.asarray(rng.integers(0, 101, (n, n)), jnp.int32)
+        res = solve_assignment(w, method="pushrelabel")
+        ops = int(res.pushes) + int(res.relabels)
+        growth = f";growth={ops/prev:.2f}x" if prev else ""
+        prev = ops
+        rows.append((f"refine_ops_n{n}", float(ops),
+                     f"bound_n2m={n**2 * n * n}" + growth))
+
+
+def bench_routing(rows):
+    """Flow router vs top-k: drops, balance, overhead (MoE integration)."""
+    from repro.core.routing import auction_route, topk_route
+    rng = np.random.default_rng(0)
+    T, E, k = 4096, 16, 2
+    cap = int(T * k / E * 1.25)
+    s = jnp.asarray(rng.normal(size=(T, E)).astype(np.float32))
+    s = s.at[:, 0].add(2.0)  # hot expert
+    for name, fn in (("topk", topk_route), ("flow", auction_route)):
+        r = fn(s, k, cap)
+        us = _time(fn, s, k, cap)
+        d = np.asarray(r.dispatch)
+        load = d.sum(0)
+        rows.append((f"route_{name}_T{T}_E{E}", us,
+                     f"dropped={T*k - int(d.sum())};"
+                     f"load_cv={load.std()/load.mean():.3f}"))
+
+
+def bench_kernels(rows):
+    """Bidding kernel tile sweep (interpret on CPU: correctness-scale)."""
+    from repro.kernels.bidding.kernel import bidding
+    from repro.kernels.bidding.ref import bidding_ref
+    rng = np.random.default_rng(0)
+    n = 512
+    c = jnp.asarray(rng.integers(-1000, 1000, (n, n)), jnp.int32)
+    p = jnp.asarray(rng.integers(-500, 500, (n,)), jnp.int32)
+    m = jnp.asarray(rng.random((n, n)) < 0.3)
+    us_ref = _time(bidding_ref, c, p, m)
+    rows.append((f"bidding_ref_xla_n{n}", us_ref, "oracle"))
+    for br, bc in ((128, 128), (256, 256), (256, 512)):
+        vmem_kib = (br * bc * 5 + bc * 4 + br * 12) / 1024
+        us = _time(bidding, c, p, m, block_rows=br, block_cols=bc,
+                   interpret=True)
+        rows.append((f"bidding_kernel_{br}x{bc}_interp", us,
+                     f"vmem_per_step_KiB={vmem_kib:.0f}"))
+
+
+def bench_flash_kernel(rows):
+    """Flash-attention Pallas kernel vs jnp flash path (interpret on CPU)."""
+    from repro.kernels.flash_attention.kernel import flash_attention_fwd
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+    import numpy as np
+    import jax.numpy as jnp
+    rng = np.random.default_rng(0)
+    B, S, H, KV, dh = 1, 512, 4, 2, 64
+    q = jnp.asarray(rng.normal(size=(B, S, H, dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, S, KV, dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, S, KV, dh)).astype(np.float32))
+    us_ref = _time(flash_attention_ref, q, k, v)
+    rows.append((f"flash_ref_xla_S{S}", us_ref, "dense oracle"))
+    for bq, bk in ((128, 128), (256, 512)):
+        vmem = (bq * dh + 2 * bk * dh + bq * bk + bq * (dh + 2)) * 4 / 1024
+        us = _time(flash_attention_fwd, q, k, v, block_q=bq, block_k=bk,
+                   interpret=True)
+        rows.append((f"flash_kernel_{bq}x{bk}_interp", us,
+                     f"vmem_per_step_KiB={vmem:.0f}"))

@@ -1,0 +1,37 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (plus a trailing roofline pointer:
+the dry-run roofline table lives in EXPERIMENTS.md and
+results/dryrun_*.json).
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks.bench_flow import (bench_assignment, bench_flash_kernel,
+                                   bench_kernels, bench_maxflow,
+                                   bench_refine_ops, bench_routing)
+
+
+def main() -> None:
+    rows: list[tuple] = []
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    benches = {
+        "maxflow": bench_maxflow,
+        "assignment": bench_assignment,
+        "refine_ops": bench_refine_ops,
+        "routing": bench_routing,
+        "kernels": bench_kernels,
+        "flash": bench_flash_kernel,
+    }
+    for name, fn in benches.items():
+        if only and only != name:
+            continue
+        fn(rows)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

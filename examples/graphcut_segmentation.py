@@ -1,0 +1,68 @@
+"""Graph-cut image segmentation — the paper's §4 application ([12], [4]).
+
+Builds the Kolmogorov grid construction for a synthetic two-region image:
+terminal capacities encode per-pixel fg/bg likelihood, neighbour capacities
+encode smoothness, and the min cut of the max flow is the segmentation.
+
+    PYTHONPATH=src python examples/graphcut_segmentation.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.maxflow.grid import GridProblem, maxflow_grid
+
+
+def synth_image(H=64, W=64, seed=0):
+    rng = np.random.default_rng(seed)
+    img = np.zeros((H, W), np.float32)
+    yy, xx = np.mgrid[:H, :W]
+    blob = ((yy - H * 0.45) ** 2 + (xx - W * 0.55) ** 2) < (H * 0.28) ** 2
+    img[blob] = 1.0
+    img += rng.normal(0, 0.30, size=img.shape)
+    return np.clip(img, -0.5, 1.5), blob
+
+
+def build_grid_cut(img, lam=5.0, sigma=0.30):
+    """Kolmogorov construction: data term -> terminals, smoothness -> grid."""
+    H, W = img.shape
+    # data term: likelihood of fg (bright) / bg (dark), scaled to ints
+    fg_cost = (1.0 - img).clip(0, 2) * 10
+    bg_cost = img.clip(0, 2) * 10
+    cap_src = np.round(bg_cost * 10).astype(np.float32)   # s->x: bg penalty
+    cap_sink = np.round(fg_cost * 10).astype(np.float32)  # x->t: fg penalty
+    # smoothness: contrast-weighted 4-neighbour capacities
+    cap = np.zeros((4, H, W), np.float32)
+    def w(a, b):
+        return np.round(lam * 10 * np.exp(-(a - b) ** 2 / (2 * sigma ** 2)))
+    cap[0, 1:, :] = w(img[1:, :], img[:-1, :])    # UP
+    cap[1, :-1, :] = w(img[:-1, :], img[1:, :])   # DOWN
+    cap[2, :, 1:] = w(img[:, 1:], img[:, :-1])    # LEFT
+    cap[3, :, :-1] = w(img[:, :-1], img[:, 1:])   # RIGHT
+    return GridProblem(jnp.asarray(cap), jnp.asarray(cap_src),
+                       jnp.asarray(cap_sink))
+
+
+def main():
+    img, truth = synth_image()
+    prob = build_grid_cut(img)
+    res = maxflow_grid(prob)
+    seg = ~np.asarray(res.cut)          # source side = foreground
+    iou = (seg & truth).sum() / max((seg | truth).sum(), 1)
+    print(f"max flow        : {float(res.flow):.0f}")
+    print(f"rounds          : {int(res.rounds)}")
+    print(f"converged       : {bool(res.converged)}")
+    print(f"IoU vs truth    : {iou:.3f}")
+    # ASCII rendering
+    for i in range(0, img.shape[0], 4):
+        row = "".join("#" if seg[i, j] else "." for j in
+                      range(0, img.shape[1], 2))
+        print(row)
+    assert iou > 0.80, "segmentation should recover the blob"
+
+
+if __name__ == "__main__":
+    main()

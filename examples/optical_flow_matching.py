@@ -1,0 +1,59 @@
+"""Optical flow by weighted matching — the paper's §1 motivation ([18]).
+
+Feature points from frame A are matched to frame B by solving the
+assignment problem on a complete bipartite graph whose weights combine
+appearance similarity and displacement priors — the paper's exact use case
+(|X| = |Y| <= 30, costs <= 100, real-time budget 1/20 s).
+
+    PYTHONPATH=src python examples/optical_flow_matching.py
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.assignment.cost_scaling import solve_assignment
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n = 30
+    # frame A points + descriptors
+    pts_a = rng.uniform(0, 100, (n, 2))
+    desc_a = rng.normal(size=(n, 8))
+    # frame B: same points moved by a smooth flow + noise, shuffled
+    flow = np.stack([3 + 0.05 * pts_a[:, 1], -2 + 0.03 * pts_a[:, 0]], 1)
+    perm = rng.permutation(n)
+    pts_b = (pts_a + flow + rng.normal(0, 0.3, (n, 2)))[perm]
+    desc_b = (desc_a + rng.normal(0, 0.1, (n, 8)))[perm]
+
+    # paper operating point: integer weights in [0, 100]
+    app = -np.linalg.norm(desc_a[:, None] - desc_b[None], axis=-1)
+    disp = -0.05 * np.linalg.norm(pts_a[:, None] - pts_b[None], axis=-1)
+    w = app + disp
+    w = np.round(100 * (w - w.min()) / (w.max() - w.min())).astype(np.int32)
+
+    solve_assignment(jnp.asarray(w), method="auction")  # compile warmup
+    t0 = time.perf_counter()
+    res = solve_assignment(jnp.asarray(w), method="auction")
+    match = np.asarray(res.col_of_row)
+    dt = time.perf_counter() - t0
+    # correct match for row i is the j with perm[j] == i
+    correct = np.argsort(perm)
+    acc = (match == correct).mean()
+
+    print(f"n={n} matched in {dt*1e3:.1f} ms "
+          f"(paper: ~50 ms on GTX 560 Ti) — {50/max(dt*1e3,1e-9):.1f}x")
+    print(f"matching accuracy: {acc:.2f}")
+    print(f"total ops (push+relabel): {int(res.pushes)+int(res.relabels)}")
+    est = pts_b[match] - pts_a
+    err = np.linalg.norm(est - flow, axis=1)[correct == match].mean()
+    print(f"mean flow error on correct matches: {err:.2f} px")
+    assert acc > 0.9
+
+
+if __name__ == "__main__":
+    main()

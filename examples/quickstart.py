@@ -1,0 +1,62 @@
+"""Quickstart: train a reduced SmolLM for a few hundred steps, then sample.
+
+    PYTHONPATH=src python examples/quickstart.py [--steps 200]
+
+Uses the same public API the production launcher uses (configs, init_model,
+make_train_step, greedy_generate) at laptop scale.
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config, smoke_variant
+from repro.data.pipeline import DataConfig, host_batch
+from repro.models.layers import Sharder
+from repro.models.model import init_model
+from repro.optim.adamw import AdamWConfig
+from repro.serve.engine import greedy_generate
+from repro.train.step import TrainConfig, init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    cfg = smoke_variant(get_config("smollm-135m"))
+    shd = Sharder()
+    params, axes = init_model(cfg, jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"model: {cfg.name} ({n/1e6:.2f}M params)")
+
+    tcfg = TrainConfig(optimizer=AdamWConfig(
+        lr_peak=3e-3, warmup_steps=20, decay_steps=args.steps))
+    state = init_train_state(cfg, tcfg, params)
+    step_fn = jax.jit(make_train_step(cfg, axes, tcfg, shd))
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=128, global_batch=8,
+                      copy_prob=0.7)
+
+    t0 = time.time()
+    for s in range(args.steps):
+        b = host_batch(dcfg, s, 0, 1)
+        state, m = step_fn(state, {k: jnp.asarray(v) for k, v in b.items()})
+        if s % 20 == 0 or s == args.steps - 1:
+            print(f"step {s:4d} loss {float(m['loss']):.4f} "
+                  f"({(s+1)*dcfg.global_batch*dcfg.seq_len/(time.time()-t0):,.0f} tok/s)")
+
+    prompts = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab, (2, 16)), jnp.int32)
+    out = greedy_generate(cfg, state.params, axes, shd, prompts, max_new=12)
+    print("greedy samples (token ids):")
+    for row in np.asarray(out):
+        print("  ", row.tolist())
+
+
+if __name__ == "__main__":
+    main()

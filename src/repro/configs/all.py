@@ -1,0 +1,5 @@
+"""Imports every architecture config so the registry is populated."""
+from repro.configs import (nemotron_4_340b, minitron_8b, smollm_135m,  # noqa
+                           command_r_plus_104b, hubert_xlarge,
+                           deepseek_v2_236b, phi35_moe_42b, mamba2_370m,
+                           jamba_v01_52b, chameleon_34b, paper_flow)

@@ -1,0 +1,101 @@
+"""Deterministic synthetic data pipeline (stateless => trivially resumable).
+
+Every *row* of every batch is a pure function of (seed, step, row_index), so:
+  * checkpoint/restart needs no data-iterator state (resume = set step),
+  * elastic re-sharding (different host/device count after a failure)
+    reproduces byte-identical data — each process materializes exactly the
+    rows of its addressable shards, whatever the new partitioning is.
+
+The token stream is a mixture of Zipf-distributed unigrams and copied spans,
+so losses actually go down during the example runs (structure to learn),
+unlike uniform noise.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2
+    copy_prob: float = 0.3
+    frontend_dim: int = 0     # audio stub: emit frame embeddings instead
+
+
+def _row_rng(cfg: DataConfig, step: int, row: int):
+    return np.random.default_rng(
+        np.random.SeedSequence([cfg.seed, step, row]))
+
+
+def _token_row(cfg: DataConfig, step: int, row: int):
+    rng = _row_rng(cfg, step, row)
+    toks = rng.zipf(cfg.zipf_a, size=cfg.seq_len + 1)
+    toks = np.minimum(toks - 1, cfg.vocab - 1).astype(np.int32)
+    if rng.random() < cfg.copy_prob:
+        L = max(1, cfg.seq_len // 4)
+        hi1 = max(1, cfg.seq_len // 2 - L)
+        src = rng.integers(0, hi1)
+        dst = rng.integers(cfg.seq_len // 2, max(cfg.seq_len // 2 + 1,
+                                                 cfg.seq_len - L))
+        span = min(L, cfg.seq_len + 1 - dst)
+        toks[dst:dst + span] = toks[src:src + span]
+    return toks
+
+
+def _embed_row(cfg: DataConfig, step: int, row: int):
+    rng = _row_rng(cfg, step, row)
+    emb = rng.normal(size=(cfg.seq_len, cfg.frontend_dim)).astype(np.float32)
+    labels = rng.integers(0, cfg.vocab, size=cfg.seq_len).astype(np.int32)
+    return emb, labels
+
+
+def rows_batch(cfg: DataConfig, step: int, start: int, stop: int):
+    """Rows [start, stop) of global batch `step` — numpy dict."""
+    if cfg.frontend_dim:
+        pairs = [_embed_row(cfg, step, r) for r in range(start, stop)]
+        return {"embeds": np.stack([p[0] for p in pairs]),
+                "labels": np.stack([p[1] for p in pairs])}
+    toks = np.stack([_token_row(cfg, step, r) for r in range(start, stop)])
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def host_batch(cfg: DataConfig, step: int, shard: int, n_shards: int):
+    """This host's contiguous slice of global batch `step`."""
+    assert cfg.global_batch % n_shards == 0
+    local = cfg.global_batch // n_shards
+    return rows_batch(cfg, step, shard * local, (shard + 1) * local)
+
+
+def make_global_batch(cfg: DataConfig, step: int, batch_sharding):
+    """Globally-sharded batch via jax.make_array_from_callback — each
+    process touches only its addressable rows."""
+    def cb_factory(name):
+        def cb(index):
+            rows = index[0]
+            start = rows.start or 0
+            stop = cfg.global_batch if rows.stop is None else rows.stop
+            data = rows_batch(cfg, step, start, stop)[name]
+            rest = tuple(index[1:])
+            return data[(slice(None),) + rest] if rest else data
+        return cb
+
+    specs = {}
+    if cfg.frontend_dim:
+        specs["embeds"] = ((cfg.global_batch, cfg.seq_len,
+                            cfg.frontend_dim), jnp.float32)
+    else:
+        specs["tokens"] = ((cfg.global_batch, cfg.seq_len), jnp.int32)
+    specs["labels"] = ((cfg.global_batch, cfg.seq_len), jnp.int32)
+
+    return {
+        name: jax.make_array_from_callback(
+            shape, batch_sharding, cb_factory(name))
+        for name, (shape, dtype) in specs.items()}

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the bidding kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INF = jnp.int32(2 ** 30)
+
+
+def bidding_ref(c, p_y, mask):
+    adj = jnp.where(mask, INF, c - p_y[None, :])
+    min1 = jnp.min(adj, axis=1)
+    arg1 = jnp.argmin(adj, axis=1)
+    n = adj.shape[1]
+    adj2 = jnp.where(jnp.arange(n)[None, :] == arg1[:, None], INF, adj)
+    min2 = jnp.min(adj2, axis=1)
+    return min1, arg1.astype(jnp.int32), min2

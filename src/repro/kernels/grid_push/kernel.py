@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: the per-node decision of one push-relabel Jacobi round.
+
+The paper's push kernel (§4.6) is the hot spot of the max-flow computation:
+each node scans its residual edges, finds the lowest neighbour, and either
+pushes or relabels. The CUDA version keeps heights in shared memory
+(Vineet & Narayanan) — the TPU analogue is VMEM tiles chosen by BlockSpec.
+
+The kernel computes, per grid tile: the chosen target (sink / source / one of
+four neighbours), the pushed amount per target plane, and the new height. The
+cross-tile flow deposition (shift-adds) is pure elementwise data movement and
+stays in XLA (ops.py) where it fuses with the surrounding ops; the VMEM-
+resident argmin/push math — the part the paper hand-optimizes — lives here.
+
+VMEM per step: 12 input planes + 7 output planes of BH·BW·4B.
+BH=BW=256 ⇒ 19·256·256·4B ≈ 5 MB — fits VMEM with double buffering.
+The halo exchange (neighbour heights) is precomputed by ops.py as 4 shifted
+height planes, which on real hardware XLA lays out as cheap HBM slices.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INF_H = 2 ** 30  # python int: jnp scalars would be captured consts in pallas
+
+
+def _grid_push_kernel(nnodes_ref, e_ref, h_ref, cap_ref, nbrh_ref, csrc_ref,
+                      csink_ref, hnew_ref, delta_ref):
+    e = e_ref[...]                  # (BH, BW) f32
+    h = h_ref[...]                  # (BH, BW) i32
+    cap = cap_ref[...]              # (4, BH, BW) f32 residual neighbour caps
+    nbr_h = nbrh_ref[...]           # (4, BH, BW) i32 neighbour heights (halo)
+    cap_src = csrc_ref[...]         # (BH, BW) f32
+    cap_sink = csink_ref[...]       # (BH, BW) f32
+    n_nodes = nnodes_ref[0]
+
+    active = e > 0
+
+    # candidate heights, same order as grid.jacobi_round:
+    # [sink, source, UP, DOWN, LEFT, RIGHT]
+    cand = jnp.concatenate([
+        jnp.where(cap_sink > 0, 0, INF_H)[None],
+        jnp.where(cap_src > 0, n_nodes, INF_H)[None],
+        jnp.where(cap > 0, nbr_h, INF_H),
+    ], axis=0)                      # (6, BH, BW)
+    h_min = jnp.min(cand, axis=0)
+    choice = jnp.argmin(cand, axis=0)
+
+    do_push = active & (h > h_min)
+    do_relabel = active & (h <= h_min) & (h_min < INF_H)
+
+    cap_all = jnp.concatenate([cap_sink[None], cap_src[None], cap], axis=0)
+    chosen_cap = jnp.take_along_axis(cap_all, choice[None], axis=0)[0]
+    delta = jnp.where(do_push, jnp.minimum(e, chosen_cap), 0.0)
+
+    planes = jax.lax.broadcasted_iota(jnp.int32, cand.shape, 0)
+    hnew_ref[...] = jnp.where(do_relabel, h_min + 1, h)
+    delta_ref[...] = jnp.where(planes == choice[None], delta[None], 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_h", "block_w",
+                                             "interpret"))
+def grid_push_decide(e, h, cap, nbr_h, cap_src, cap_sink, n_nodes,
+                     *, block_h: int = 256, block_w: int = 256,
+                     interpret: bool = True):
+    """Per-node push/relabel decision for one Jacobi round.
+
+    Returns (h_new, delta) where delta[p] is the flow pushed toward plane
+    p ∈ [sink, source, UP, DOWN, LEFT, RIGHT].
+    """
+    H, W = e.shape
+    bh, bw = min(block_h, H), min(block_w, W)
+    assert H % bh == 0 and W % bw == 0, (H, W, bh, bw)
+    grid = (H // bh, W // bw)
+
+    spec2d = pl.BlockSpec((bh, bw), lambda i, j: (i, j))
+    spec4 = pl.BlockSpec((4, bh, bw), lambda i, j: (0, i, j))
+    spec6 = pl.BlockSpec((6, bh, bw), lambda i, j: (0, i, j))
+
+    h_new, delta = pl.pallas_call(
+        _grid_push_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),  # n_nodes scalar
+            spec2d, spec2d, spec4, spec4, spec2d, spec2d,
+        ],
+        out_specs=[spec2d, spec6],
+        out_shape=[
+            jax.ShapeDtypeStruct((H, W), jnp.int32),
+            jax.ShapeDtypeStruct((6, H, W), jnp.float32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray([n_nodes], jnp.int32), e, h, cap, nbr_h, cap_src, cap_sink)
+    return h_new, delta

@@ -1,0 +1,41 @@
+"""Jit'd wrapper: a full Jacobi round with the Pallas decision kernel.
+
+Produces bit-identical state transitions to ``repro.core.maxflow.grid.
+jacobi_round`` (asserted in tests); the wrapper adds the halo gather before
+the kernel and the shift-add flow deposition after it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.maxflow.grid import (GridFlowState, _OPP, _move, _nbr_h)
+from repro.kernels.grid_push.kernel import grid_push_decide
+from repro.kernels.grid_push.ref import grid_push_decide_ref
+
+
+def jacobi_round_pallas(state: GridFlowState, n_nodes,
+                        *, block_h: int = 256, block_w: int = 256,
+                        interpret: bool | None = None) -> GridFlowState:
+    e, h, cap, cap_src, cap_sink, sink_flow, src_flow = state
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    nbr_h = jnp.stack([_nbr_h(h, d) for d in range(4)], axis=0)
+    h_new, delta = grid_push_decide(
+        e, h, cap, nbr_h, cap_src, cap_sink, n_nodes,
+        block_h=block_h, block_w=block_w, interpret=interpret)
+
+    d_sink, d_src = delta[0], delta[1]
+    d_nbr = [delta[2 + d] for d in range(4)]
+    out = d_sink + d_src + sum(d_nbr)
+    inflow = sum(_move(d_nbr[d], d) for d in range(4))
+    cap_new = jnp.stack(
+        [cap[d] - d_nbr[d] + _move(d_nbr[_OPP[d]], _OPP[d]) for d in range(4)],
+        0)
+    return GridFlowState(
+        e=e - out + inflow, h=h_new, cap=cap_new,
+        cap_src=cap_src - d_src, cap_sink=cap_sink - d_sink,
+        sink_flow=sink_flow + jnp.sum(d_sink),
+        src_flow=src_flow + jnp.sum(d_src),
+    )

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the grid_push kernel (mirrors grid.jacobi_round)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INF_H = jnp.int32(2 ** 30)
+
+
+def grid_push_decide_ref(e, h, cap, nbr_h, cap_src, cap_sink, n_nodes):
+    active = e > 0
+    cand = jnp.concatenate([
+        jnp.where(cap_sink > 0, 0, INF_H)[None],
+        jnp.where(cap_src > 0, jnp.int32(n_nodes), INF_H)[None],
+        jnp.where(cap > 0, nbr_h, INF_H),
+    ], axis=0)
+    h_min = jnp.min(cand, axis=0)
+    choice = jnp.argmin(cand, axis=0)
+    do_push = active & (h > h_min)
+    do_relabel = active & (h <= h_min) & (h_min < INF_H)
+
+    cap_all = jnp.concatenate([cap_sink[None], cap_src[None], cap], axis=0)
+    chosen_cap = jnp.take_along_axis(cap_all, choice[None], axis=0)[0]
+    delta = jnp.where(do_push, jnp.minimum(e, chosen_cap), 0.0)
+    planes = jax.lax.broadcasted_iota(jnp.int32, cand.shape, 0)
+    h_new = jnp.where(do_relabel, h_min + 1, h)
+    return h_new, jnp.where(planes == choice[None], delta[None], 0.0)

@@ -1,0 +1,167 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the production
+mesh, print memory/cost analysis, and emit roofline rows.
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs.base import get_config, list_configs      # noqa: E402
+from repro.launch.mesh import make_production_mesh           # noqa: E402
+from repro.launch.specs import (SHAPES, build_cell,          # noqa: E402
+                                cell_skip_reason)
+from repro.roofline import Roofline, model_flops_for        # noqa: E402
+from repro.roofline_hlo import analyze as analyze_hlo        # noqa: E402
+
+LM_ARCHS = [a for a in [
+    "nemotron-4-340b", "minitron-8b", "smollm-135m", "command-r-plus-104b",
+    "hubert-xlarge", "deepseek-v2-236b", "phi3.5-moe-42b-a6.6b",
+    "mamba2-370m", "jamba-v0.1-52b", "chameleon-34b"]]
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
+             router_override=None, remat_override=None,
+             microbatches: int = 1, grad_dtype: str = "f32",
+             quantize_moments: bool = False, kv_quant: bool = False,
+             verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    skip = cell_skip_reason(cfg, shape)
+    if skip:
+        return {"arch": arch, "shape": shape, "status": "skip",
+                "reason": skip}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    t0 = time.time()
+    try:
+        from repro.optim.adamw import AdamWConfig
+        from repro.train.step import TrainConfig
+        tcfg = TrainConfig(num_microbatches=microbatches,
+                           grad_dtype=grad_dtype,
+                           optimizer=AdamWConfig(
+                               quantize_moments=quantize_moments))
+        cell = build_cell(arch, shape, mesh,
+                          router_override=router_override,
+                          remat_override=remat_override,
+                          kv_quant=kv_quant, tcfg=tcfg)
+        with mesh:
+            jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                             out_shardings=cell.out_shardings,
+                             donate_argnums=cell.donate_argnums)
+            lowered = jitted.lower(*cell.args)
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        acc = analyze_hlo(hlo)           # trip-count-exact (per device)
+        coll = acc["collectives"]
+        flops = acc["flops"]
+        bytes_acc = acc["bytes"]
+        bpd = float(getattr(mem, "temp_size_in_bytes", 0) +
+                    getattr(mem, "argument_size_in_bytes", 0) +
+                    getattr(mem, "output_size_in_bytes", 0) -
+                    getattr(mem, "alias_size_in_bytes", 0))
+        rl = Roofline(
+            arch=arch, shape=shape,
+            mesh="2x16x16" if multi_pod else "16x16", chips=chips,
+            flops=flops, bytes_accessed=bytes_acc,
+            coll_bytes=float(sum(coll.values())), coll_breakdown=coll,
+            model_flops=model_flops_for(cfg, SHAPES[shape]),
+            bytes_per_chip=bpd)
+        out = {
+            "arch": arch, "shape": shape, "status": "ok",
+            "mesh": rl.mesh, "chips": chips,
+            "compile_s": round(time.time() - t0, 1),
+            "flops_per_chip": flops, "bytes_per_chip_accessed": bytes_acc,
+            "collective_bytes_per_chip": rl.coll_bytes,
+            "coll_breakdown": coll,
+            "cost_analysis_flops": float(cost.get("flops", 0.0)),
+            "cost_analysis_bytes": float(cost.get("bytes accessed", 0.0)),
+            "bytes_per_chip": bpd,
+            "t_compute_ms": rl.t_compute * 1e3,
+            "t_memory_ms": rl.t_memory * 1e3,
+            "t_collective_ms": rl.t_collective * 1e3,
+            "bottleneck": rl.bottleneck,
+            "model_flops": rl.model_flops,
+            "useful_flops_frac": rl.useful_flops_frac,
+            "roofline_frac": rl.roofline_frac,
+            "note": cell.note,
+        }
+        if verbose:
+            print(f"[ok] {arch}/{shape} mesh={rl.mesh} "
+                  f"compile={out['compile_s']}s "
+                  f"mem/chip={bpd/2**30:.2f}GiB "
+                  f"t=(c{rl.t_compute*1e3:.1f}|m{rl.t_memory*1e3:.1f}|"
+                  f"x{rl.t_collective*1e3:.1f})ms "
+                  f"bottleneck={rl.bottleneck} "
+                  f"roofline={rl.roofline_frac:.2f}")
+            print(f"     memory_analysis: {mem}")
+        return out
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        if verbose:
+            traceback.print_exc()
+        return {"arch": arch, "shape": shape, "status": "error",
+                "error": f"{type(e).__name__}: {e}",
+                "compile_s": round(time.time() - t0, 1)}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--router", default=None,
+                    choices=[None, "topk", "flow"])
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-dtype", default="f32")
+    ap.add_argument("--quantize-moments", action="store_true")
+    ap.add_argument("--kv-quant", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in LM_ARCHS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    results = []
+    for a, s in cells:
+        results.append(run_cell(a, s, multi_pod=args.multi_pod,
+                                router_override=args.router,
+                                remat_override=args.remat,
+                                microbatches=args.microbatches,
+                                grad_dtype=args.grad_dtype,
+                                quantize_moments=args.quantize_moments,
+                                kv_quant=args.kv_quant))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    bad = [r for r in results if r["status"] == "error"]
+    print(f"\n{len(results)} cells: "
+          f"{sum(r['status']=='ok' for r in results)} ok, "
+          f"{sum(r['status']=='skip' for r in results)} skip, "
+          f"{len(bad)} error")
+    for r in bad:
+        print(f"  ERROR {r['arch']}/{r['shape']}: {r['error']}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

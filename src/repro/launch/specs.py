@@ -1,0 +1,199 @@
+"""Per-(arch × input-shape) dry-run cell builder.
+
+For every cell this produces: the step function (train / prefill / decode),
+ShapeDtypeStruct stand-ins for all its inputs (no device allocation), and
+NamedShardings for in_shardings — everything ``dryrun.py`` needs to
+``.lower().compile()`` on the production mesh.
+
+Logical-axes trees are obtained from a *tiny same-structure variant* (real
+init, <1M params) — the axes values depend only on the config's structure,
+never on its sizes — while the full-size ShapeDtypeStructs come from
+``jax.eval_shape`` (abstract, no allocation even for 340B params).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, get_config, smoke_variant
+from repro.models.layers import Sharder, DEFAULT_RULES
+from repro.models.model import apply_model, init_caches, init_model
+from repro.serve.engine import ServeState, make_prefill_step, make_serve_step
+from repro.train.step import (TrainConfig, TrainState, init_train_state,
+                              make_train_step)
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+
+class Cell(NamedTuple):
+    fn: Any                  # callable to jit
+    args: tuple              # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    out_shardings: Any       # None -> compiler-chosen
+    donate_argnums: tuple
+    note: str
+
+
+def cell_skip_reason(cfg: ModelConfig, shape_name: str) -> str | None:
+    if cfg.family == "encoder" and SHAPES[shape_name]["kind"] == "decode":
+        return "encoder-only: no decode step"
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return "full quadratic attention: 500k infeasible (DESIGN.md §6)"
+    return None
+
+
+def model_axes(cfg: ModelConfig):
+    """Axes tree via a tiny same-structure init (values are size-free)."""
+    _, axes = init_model(smoke_variant(cfg), jax.random.PRNGKey(0))
+    return axes
+
+
+def cache_axes_of(cfg: ModelConfig):
+    _, ca = init_caches(smoke_variant(cfg), B=1, S_max=8)
+    return ca
+
+
+def _tree_specs(shd: Sharder, tree, axes_tree):
+    leaves, tdef = jax.tree.flatten(tree)
+    alist = tdef.flatten_up_to(axes_tree)
+    return jax.tree.unflatten(
+        tdef, [shd.spec(l.shape, a) for l, a in zip(leaves, alist)])
+
+
+def _opt_moment_specs(shd: Sharder, m_tree, axes_tree):
+    """Specs for Adam moments: like the params, but 8-bit-quantized leaves
+    (Quantized(q, scale)) shard their leading dims like the param and
+    replicate the trailing (block, BLOCK) payload dims."""
+    from repro.optim.adamw import Quantized
+    from repro.models.model import _is_axes
+
+    a_leaves, a_def = jax.tree.flatten(axes_tree, is_leaf=_is_axes)
+    m_leaves = a_def.flatten_up_to(m_tree)
+
+    def spec_of(m, a):
+        if isinstance(m, Quantized):
+            qa = tuple(a[:-1]) + (None, None)
+            sa = tuple(a[:-1]) + (None, None)
+            return Quantized(shd.spec(m.q.shape, qa),
+                             shd.spec(m.scale.shape, sa))
+        return shd.spec(m.shape, a)
+
+    return jax.tree.unflatten(
+        a_def, [spec_of(m, a) for m, a in zip(m_leaves, a_leaves)])
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def resolve_config(arch: str, router_override=None, remat_override=None,
+                   kv_quant: bool = False):
+    cfg = get_config(arch)
+    if router_override and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, router=router_override))
+    if remat_override:
+        cfg = dataclasses.replace(cfg, remat=remat_override)
+    if kv_quant:
+        cfg = dataclasses.replace(cfg, kv_quant=True)
+    return cfg
+
+
+def build_cell(arch: str, shape_name: str, mesh, *,
+               param_dtype=jnp.bfloat16, router_override: str | None = None,
+               remat_override: str | None = None, kv_quant: bool = False,
+               tcfg: TrainConfig | None = None) -> Cell:
+    cfg = resolve_config(arch, router_override, remat_override, kv_quant)
+    info = SHAPES[shape_name]
+    S, B = info["seq_len"], info["global_batch"]
+    shd = Sharder(mesh, DEFAULT_RULES)
+    tcfg = tcfg or TrainConfig()
+
+    params_sds = jax.eval_shape(
+        lambda k: init_model(cfg, k, dtype=param_dtype)[0],
+        jax.random.PRNGKey(0))
+    axes = model_axes(cfg)
+    p_specs = _tree_specs(shd, params_sds, axes)
+    batch_axes = ("batch", None)
+
+    if info["kind"] == "train":
+        state_sds = jax.eval_shape(
+            lambda p: init_train_state(cfg, tcfg, p), params_sds)
+        s_specs = TrainState(
+            params=p_specs,
+            opt=type(state_sds.opt)(
+                step=P(),
+                m=_opt_moment_specs(shd, state_sds.opt.m, axes),
+                v=_opt_moment_specs(shd, state_sds.opt.v, axes)))
+        if cfg.frontend_dim:
+            batch_sds = {
+                "embeds": jax.ShapeDtypeStruct((B, S, cfg.frontend_dim),
+                                               jnp.float32),
+                "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+            b_specs = {"embeds": shd.spec((B, S, cfg.frontend_dim),
+                                          ("batch", None, None)),
+                       "labels": shd.spec((B, S), batch_axes)}
+        else:
+            batch_sds = {
+                "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+            b_specs = {k: shd.spec((B, S), batch_axes) for k in batch_sds}
+        fn = make_train_step(cfg, axes, tcfg, shd)
+        # out = (new_state, metrics): aliasing the donated state requires
+        # matching out_shardings; metrics stay compiler-chosen.
+        out_sh = (_named(mesh, s_specs), None)
+        return Cell(fn, (state_sds, batch_sds),
+                    (_named(mesh, s_specs), _named(mesh, b_specs)),
+                    out_sh, (0,), f"{arch}/{shape_name}: train_step")
+
+    caches_sds = jax.eval_shape(
+        lambda: init_caches(cfg, B, S, dtype=jnp.bfloat16)[0])
+    cache_axes = cache_axes_of(cfg)
+    c_specs = _tree_specs(shd, caches_sds, cache_axes)
+
+    if info["kind"] == "prefill":
+        if cfg.frontend_dim:
+            # encoder "prefill" = full forward classification at length S
+            def fn(params, embeds):
+                return apply_model(params, axes, cfg, shd,
+                                   {"embeds": embeds}).logits
+            args = (params_sds,
+                    jax.ShapeDtypeStruct((B, S, cfg.frontend_dim),
+                                         jnp.float32))
+            in_sh = (_named(mesh, p_specs),
+                     _named(mesh, shd.spec((B, S, cfg.frontend_dim),
+                                           ("batch", None, None))))
+            return Cell(fn, args, in_sh, None, (),
+                        f"{arch}/{shape_name}: encoder forward")
+        fn = make_prefill_step(cfg, axes, cache_axes, shd)
+        args = (params_sds, jax.ShapeDtypeStruct((B, S), jnp.int32),
+                caches_sds)
+        in_sh = (_named(mesh, p_specs),
+                 _named(mesh, shd.spec((B, S), batch_axes)),
+                 _named(mesh, c_specs))
+        return Cell(fn, args, in_sh, None, (2,),
+                    f"{arch}/{shape_name}: prefill")
+
+    # decode: cache holds seq_len-1 tokens, serve_step appends one
+    serve = make_serve_step(cfg, axes, shd, pos_offset=S - 1)
+    state_sds = ServeState(
+        caches=caches_sds,
+        last_tokens=jax.ShapeDtypeStruct((B,), jnp.int32),
+        lengths=jax.ShapeDtypeStruct((B,), jnp.int32))
+    s_specs = ServeState(caches=c_specs,
+                         last_tokens=shd.spec((B,), ("batch",)),
+                         lengths=shd.spec((B,), ("batch",)))
+    return Cell(serve, (params_sds, state_sds),
+                (_named(mesh, p_specs), _named(mesh, s_specs)),
+                (None, _named(mesh, s_specs)), (1,),
+                f"{arch}/{shape_name}: serve_step (decode)")

@@ -1,0 +1,134 @@
+"""End-to-end training driver: data -> train_step -> checkpoint/restart.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+      --steps 200 --batch 8 --seq 256 --ckpt-dir /tmp/run1 --resume auto
+
+Runs on whatever devices the process has (CPU smoke-scale included); the
+same code path drives the production mesh under a multi-host launcher —
+jax.distributed.initialize() is called when JAX_COORDINATOR is set.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import store
+from repro.configs.base import get_config, smoke_variant
+from repro.data.pipeline import DataConfig, make_global_batch
+from repro.launch.mesh import make_host_mesh
+from repro.launch.specs import model_axes, _tree_specs, _named
+from repro.models.layers import Sharder, DEFAULT_RULES
+from repro.models.model import init_model
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.ft import PreemptionGuard, StepWatchdog
+from repro.train.step import (TrainConfig, TrainState, init_train_state,
+                              make_train_step)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", default="none", choices=["none", "auto"])
+    ap.add_argument("--router", default=None)
+    ap.add_argument("--grad-dtype", default="f32")
+    ap.add_argument("--quantize-moments", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if os.environ.get("JAX_COORDINATOR"):
+        jax.distributed.initialize()   # multi-host path
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    if args.router and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, router=args.router))
+
+    mesh = make_host_mesh(args.model_parallel)
+    shd = Sharder(mesh, DEFAULT_RULES)
+    tcfg = TrainConfig(
+        optimizer=AdamWConfig(lr_peak=args.lr, warmup_steps=20,
+                              decay_steps=args.steps,
+                              quantize_moments=args.quantize_moments),
+        num_microbatches=args.microbatches, grad_dtype=args.grad_dtype)
+
+    params, axes = init_model(cfg, jax.random.PRNGKey(args.seed))
+    state = init_train_state(cfg, tcfg, params)
+    p_specs = _tree_specs(shd, params, axes)
+    s_specs = TrainState(
+        params=p_specs,
+        opt=type(state.opt)(step=P(),
+                            m=jax.tree.map(lambda _: P(), state.opt.m),
+                            v=jax.tree.map(lambda _: P(), state.opt.v)))
+    s_sh = _named(mesh, s_specs)
+    state = jax.device_put(state, s_sh)
+
+    start_step = 0
+    if args.resume == "auto" and args.ckpt_dir:
+        latest = store.latest_step(args.ckpt_dir)
+        if latest is not None:
+            state = store.restore(args.ckpt_dir, latest, state, s_sh)
+            start_step = latest
+            print(f"[resume] restored step {latest} from {args.ckpt_dir}")
+
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                      global_batch=args.batch, seed=args.seed,
+                      frontend_dim=cfg.frontend_dim)
+    batch_sh = NamedSharding(mesh, shd.spec((args.batch, args.seq),
+                                            ("batch", None)))
+    emb_sh = NamedSharding(
+        mesh, shd.spec((args.batch, args.seq, max(cfg.frontend_dim, 1)),
+                       ("batch", None, None)))
+
+    step_fn = jax.jit(make_train_step(cfg, axes, tcfg, shd),
+                      donate_argnums=(0,))
+    watchdog = StepWatchdog()
+    with PreemptionGuard() as guard, mesh:
+        for step in range(start_step, args.steps):
+            batch = make_global_batch(
+                dcfg, step, emb_sh if cfg.frontend_dim else batch_sh)
+            if cfg.frontend_dim:
+                batch["labels"] = jax.device_put(batch["labels"], batch_sh)
+            watchdog.start()
+            state, metrics = step_fn(state, batch)
+            loss = float(metrics["loss"])
+            slow = watchdog.stop(step)
+            if step % 10 == 0 or step == args.steps - 1:
+                print(f"step {step}: loss={loss:.4f} "
+                      f"lr={float(metrics['lr']):.2e} "
+                      f"gnorm={float(metrics['grad_norm']):.2f} "
+                      f"t={watchdog.times[-1]*1e3:.0f}ms"
+                      + (" [STRAGGLER]" if slow else ""))
+            want_ckpt = args.ckpt_dir and (
+                (step + 1) % args.ckpt_every == 0 or guard.requested
+                or step == args.steps - 1)
+            if want_ckpt:
+                path = store.save(args.ckpt_dir, step + 1, state)
+                print(f"[ckpt] step {step + 1} -> {path}")
+            if guard.requested:
+                print("[preempt] checkpoint written, exiting cleanly")
+                return
+    if watchdog.slow_steps:
+        print(f"[watchdog] {len(watchdog.slow_steps)} straggler steps "
+              f"(median {watchdog.median*1e3:.0f}ms)")
+
+
+if __name__ == "__main__":
+    main()

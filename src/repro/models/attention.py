@@ -1,0 +1,366 @@
+"""Attention: GQA (+RoPE, qk-norm) and DeepSeek MLA, prefill + decode.
+
+Memory discipline: prefill uses a flash-style online-softmax scan over key
+chunks (never materializes S×S scores — mandatory at 32k+); decode scores
+against the full cache (1×T per head is small). KV caches are sharded over
+the *sequence* axis on the model mesh axis: XLA's SPMD partitioner turns the
+softmax reductions into the flash-decoding split-KV collective pattern
+automatically.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamFactory, Sharder, apply_rope, rmsnorm
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array           # GQA: (B, S, KV, dh) | MLA: c_kv (B, S, kv_lora)
+    v: jax.Array           # GQA: (B, S, KV, dh) | MLA: k_rope (B, S, rope)
+    length: jax.Array      # filled prefix length (scalar int32)
+
+
+class KVCacheQ(NamedTuple):
+    """int8-quantized GQA KV cache: halves decode's dominant HBM term.
+
+    Per-vector symmetric scales (one f32 per (b, s, kv_head)); dequant
+    happens next to the score einsum where the TPU fuses it into the
+    matmul's operand read. Enabled by ``cfg.kv_quant``.
+    """
+    k_q: jax.Array         # (B, S, KV, dh) int8
+    k_s: jax.Array         # (B, S, KV, 1) f32
+    v_q: jax.Array         # (B, S, KV, dh) int8
+    v_s: jax.Array         # (B, S, KV, 1) f32
+    length: jax.Array
+
+
+def _quant_kv(x):
+    s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.
+    q = jnp.round(x.astype(jnp.float32) /
+                  jnp.maximum(s, 1e-9)).astype(jnp.int8)
+    return q, s
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_gqa(pf: ParamFactory, path: str, cfg):
+    dh, H, KV, D = cfg.dh, cfg.n_heads, cfg.n_kv_heads, cfg.d_model
+    p = {
+        "wq": pf.dense(f"{path}.wq", (D, H * dh), ("fsdp", "tp")),
+        "wk": pf.dense(f"{path}.wk", (D, KV * dh), ("fsdp", "tp")),
+        "wv": pf.dense(f"{path}.wv", (D, KV * dh), ("fsdp", "tp")),
+        "wo": pf.dense(f"{path}.wo", (H * dh, D), ("tp", "fsdp"),
+                       scale=(H * dh) ** -0.5 / (2 * cfg.n_layers) ** 0.5),
+    }
+    if cfg.qk_norm:
+        p["q_g"] = pf.ones(f"{path}.q_g", (dh,), (None,))
+        p["k_g"] = pf.ones(f"{path}.k_g", (dh,), (None,))
+    return p
+
+
+def _flash_fwd_scan(q, k, v, causal, scale, chunk):
+    """Online-softmax forward. Returns (out32 (B,H,Sq,dv), lse (B,H,Sq)).
+
+    Mixed precision, MXU-native: QK^T and PV dots run on bf16 operands with
+    f32 accumulation (preferred_element_type); only the softmax statistics
+    stay f32. Halves the dominant HBM traffic (scores/probs) and uses the
+    MXU at full bf16 rate instead of 1/4-rate f32.
+    """
+    B, Sq, H, dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    G = H // KV
+    n_chunks = Sk // chunk
+    kc = k.reshape(B, n_chunks, chunk, KV, dh).swapaxes(0, 1)
+    vc = v.reshape(B, n_chunks, chunk, KV, dv).swapaxes(0, 1)
+    pos_q = jnp.arange(Sq)
+    cdt = q.dtype if q.dtype == jnp.bfloat16 else jnp.float32
+
+    def body(carry, inp):
+        # NOTE: the chunk index lives in the CARRY, not in an arange xs:
+        # as an xs-derived constant XLA pre-materializes every chunk's
+        # broadcasted causal mask into one (n_chunks, B, H, Sq, C) buffer.
+        acc, m, l, idx = carry
+        kb, vb = inp
+        kb = jnp.repeat(kb, G, axis=2).astype(cdt)
+        vb = jnp.repeat(vb, G, axis=2).astype(cdt)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(cdt), kb,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            # additive f32 penalty, NOT where(pred,...): the (Sq, C) penalty
+            # is loop-invariant across layers, and a hoisted boolean
+            # broadcast materializes (n_chunks, B, H, Sq, C) preds (2.4 GiB
+            # per chip observed); the f32 add keeps the hoist at (Sq, C).
+            pos_k = idx * chunk + jnp.arange(chunk)
+            pen = jnp.where(pos_q[:, None] >= pos_k[None, :], 0.0, NEG_INF)
+            s = s + pen[None, None]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(cdt), vb,
+            preferred_element_type=jnp.float32)
+        return (acc_new, m_new, l_new, idx + 1), None
+
+    acc0 = jnp.zeros((B, H, Sq, dv), jnp.float32)
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    (acc, m, l, _), _ = jax.lax.scan(
+        body, (acc0, m0, l0, jnp.int32(0)), (kc, vc))
+    l = jnp.maximum(l, 1e-30)
+    return acc / l[..., None], m + jnp.log(l)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash_core(q, k, v, causal: bool, scale: float, chunk: int):
+    out, _ = _flash_fwd_scan(q, k, v, causal, scale, chunk)
+    return out.swapaxes(1, 2).astype(q.dtype)
+
+
+def _flash_core_fwd(q, k, v, causal, scale, chunk):
+    out32, lse = _flash_fwd_scan(q, k, v, causal, scale, chunk)
+    out = out32.swapaxes(1, 2).astype(q.dtype)
+    return out, (q, k, v, out32, lse)
+
+
+def _flash_core_bwd(causal, scale, chunk, res, dout):
+    """Flash backward: recompute p per key chunk from (q,k,v,out,lse).
+
+    Residual memory is O(B·H·S·dv) instead of the O(B·H·S²) a plain scan
+    backward would save — this is what makes 32k prefill trainable.
+    """
+    q, k, v, out32, lse = res
+    B, Sq, H, dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    G = H // KV
+    n_chunks = Sk // chunk
+    cdt = q.dtype if q.dtype == jnp.bfloat16 else jnp.float32
+    qc = q.astype(cdt)
+    do32 = dout.astype(jnp.float32).swapaxes(1, 2)        # (B,H,Sq,dv)
+    doc = do32.astype(cdt)
+    delta = jnp.sum(do32 * out32, axis=-1)                # (B,H,Sq)
+    pos_q = jnp.arange(Sq)
+    kc = k.reshape(B, n_chunks, chunk, KV, dh).swapaxes(0, 1)
+    vc = v.reshape(B, n_chunks, chunk, KV, dv).swapaxes(0, 1)
+
+    def body(carry, inp):
+        dq, idx = carry
+        kb, vb = inp
+        kbf = jnp.repeat(kb, G, axis=2).astype(cdt)
+        vbf = jnp.repeat(vb, G, axis=2).astype(cdt)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qc, kbf,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            pos_k = idx * chunk + jnp.arange(chunk)
+            pen = jnp.where(pos_q[:, None] >= pos_k[None, :], 0.0, NEG_INF)
+            s = s + pen[None, None]
+        p = jnp.exp(s - lse[..., None])                   # (B,H,Sq,C) f32
+        pc = p.astype(cdt)
+        dv_c = jnp.einsum("bhqk,bhqd->bkhd", pc, doc,
+                          preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bhqd,bkhd->bhqk", doc, vbf,
+                        preferred_element_type=jnp.float32)
+        ds = (p * (dp - delta[..., None]) * scale).astype(cdt)
+        dq = dq + jnp.einsum("bhqk,bkhd->bqhd", ds, kbf,
+                             preferred_element_type=jnp.float32)
+        dk_c = jnp.einsum("bhqk,bqhd->bkhd", ds, qc,
+                          preferred_element_type=jnp.float32)
+        dk_c = dk_c.reshape(B, chunk, KV, G, dh).sum(3)
+        dv_c = dv_c.reshape(B, chunk, KV, G, dv).sum(3)
+        return (dq, idx + 1), (dk_c, dv_c)
+
+    dq0 = jnp.zeros((B, Sq, H, dh), jnp.float32)
+    (dq, _), (dk_c, dv_c) = jax.lax.scan(
+        body, (dq0, jnp.int32(0)), (kc, vc))
+    dk = dk_c.swapaxes(0, 1).reshape(B, Sk, KV, dh)
+    dv_full = dv_c.swapaxes(0, 1).reshape(B, Sk, KV, dv)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv_full.astype(v.dtype)
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def _flash_attend(q, k, v, *, causal: bool, scale: float, chunk: int):
+    """Flash attention (custom VJP). q: (B,Sq,H,dh); k/v: (B,Sk,KV,·)."""
+    Sk = k.shape[1]
+    chunk = min(chunk, Sk)
+    assert Sk % chunk == 0, (Sk, chunk)
+    return _flash_core(q, k, v, causal, scale, chunk)
+
+
+def gqa_apply(p, x, cfg, shd: Sharder, *,
+              positions, cache: Optional[KVCache] = None, decode: bool,
+              kv_chunk: int = 512):
+    """Returns (out, new_cache). Training/prefill: decode=False."""
+    B, S, D = x.shape
+    dh, H, KV = cfg.dh, cfg.n_heads, cfg.n_kv_heads
+    q = (x @ p["wq"][0]).reshape(B, S, H, dh)
+    k = (x @ p["wk"][0]).reshape(B, S, KV, dh)
+    v = (x @ p["wv"][0]).reshape(B, S, KV, dh)
+    if cfg.qk_norm:
+        q, k = rmsnorm(q, p["q_g"][0]), rmsnorm(k, p["k_g"][0])
+    if cfg.rope_theta:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = shd.constrain(q, "batch", None, "tp", None)
+    scale = dh ** -0.5
+
+    quant = isinstance(cache, KVCacheQ)
+    if decode:
+        assert cache is not None and S == 1
+        if quant:
+            kq, ks = _quant_kv(k)
+            vq, vs = _quant_kv(v)
+            kcq = jax.lax.dynamic_update_slice(
+                cache.k_q, kq, (0, cache.length, 0, 0))
+            kcs = jax.lax.dynamic_update_slice(
+                cache.k_s, ks, (0, cache.length, 0, 0))
+            vcq = jax.lax.dynamic_update_slice(
+                cache.v_q, vq, (0, cache.length, 0, 0))
+            vcs = jax.lax.dynamic_update_slice(
+                cache.v_s, vs, (0, cache.length, 0, 0))
+            kcq = shd.constrain(kcq, "batch", "seq", None, None)
+            vcq = shd.constrain(vcq, "batch", "seq", None, None)
+            kc = kcq.astype(jnp.float32) * kcs    # fused into score read
+            vc = vcq.astype(jnp.float32) * vcs
+            new_cache = KVCacheQ(kcq, kcs, vcq, vcs, cache.length + 1)
+        else:
+            kc = jax.lax.dynamic_update_slice(
+                cache.k, k.astype(cache.k.dtype), (0, cache.length, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                cache.v, v.astype(cache.v.dtype), (0, cache.length, 0, 0))
+            kc = shd.constrain(kc, "batch", "seq", None, None)
+            vc = shd.constrain(vc, "batch", "seq", None, None)
+            new_cache = KVCache(kc, vc, cache.length + 1)
+        T = kc.shape[1]
+        G = H // KV
+        # grouped decode score: q reshaped to (B, 1, KV, G, dh)
+        qg = q.astype(jnp.float32).reshape(B, 1, KV, G, dh)
+        s = jnp.einsum("bqkgd,btkd->bkgqt", qg, kc.astype(jnp.float32))
+        s = s * scale
+        valid = jnp.arange(T) <= cache.length     # includes the new token
+        s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqt,btkd->bqkgd", pr, vc.astype(jnp.float32))
+        o = o.reshape(B, 1, H * dh).astype(x.dtype)
+    else:
+        o = _flash_attend(q, k, v, causal=cfg.causal, scale=scale,
+                          chunk=kv_chunk).reshape(B, S, H * dh)
+        if cache is None:
+            new_cache = None
+        elif quant:             # prefill: quantize the whole prefix
+            kq, ks = _quant_kv(k)
+            vq, vs = _quant_kv(v)
+            new_cache = KVCacheQ(
+                jax.lax.dynamic_update_slice(cache.k_q, kq, (0, 0, 0, 0)),
+                jax.lax.dynamic_update_slice(cache.k_s, ks, (0, 0, 0, 0)),
+                jax.lax.dynamic_update_slice(cache.v_q, vq, (0, 0, 0, 0)),
+                jax.lax.dynamic_update_slice(cache.v_s, vs, (0, 0, 0, 0)),
+                jnp.int32(S))
+        else:                   # prefill: write into the S_max buffer
+            kc = jax.lax.dynamic_update_slice(
+                cache.k, k.astype(cache.k.dtype), (0, 0, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                cache.v, v.astype(cache.v.dtype), (0, 0, 0, 0))
+            new_cache = KVCache(kc, vc, jnp.int32(S))
+    out = o @ p["wo"][0]
+    return shd.constrain(out, "batch", None, None), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): low-rank KV compression; absorbed decode
+# ---------------------------------------------------------------------------
+
+def init_mla(pf: ParamFactory, path: str, cfg):
+    m, D, H = cfg.mla, cfg.d_model, cfg.n_heads
+    qd = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "wq_a": pf.dense(f"{path}.wq_a", (D, m.q_lora_rank), ("fsdp", None)),
+        "q_norm": pf.ones(f"{path}.q_norm", (m.q_lora_rank,), (None,)),
+        "wq_b": pf.dense(f"{path}.wq_b", (m.q_lora_rank, H * qd),
+                         (None, "tp")),
+        "wkv_a": pf.dense(f"{path}.wkv_a",
+                          (D, m.kv_lora_rank + m.qk_rope_dim),
+                          ("fsdp", None)),
+        "kv_norm": pf.ones(f"{path}.kv_norm", (m.kv_lora_rank,), (None,)),
+        "wk_b": pf.dense(f"{path}.wk_b", (m.kv_lora_rank, H, m.qk_nope_dim),
+                         (None, "tp", None)),
+        "wv_b": pf.dense(f"{path}.wv_b", (m.kv_lora_rank, H, m.v_dim),
+                         (None, "tp", None)),
+        "wo": pf.dense(f"{path}.wo", (H * m.v_dim, D), ("tp", "fsdp"),
+                       scale=(H * m.v_dim) ** -0.5 / (2 * cfg.n_layers) ** .5),
+    }
+
+
+def mla_apply(p, x, cfg, shd: Sharder, *,
+              positions, cache: Optional[KVCache] = None, decode: bool,
+              kv_chunk: int = 512):
+    m, H = cfg.mla, cfg.n_heads
+    B, S, D = x.shape
+    nope, rope, vd = m.qk_nope_dim, m.qk_rope_dim, m.v_dim
+    scale = (nope + rope) ** -0.5
+
+    q = rmsnorm(x @ p["wq_a"][0], p["q_norm"][0]) @ p["wq_b"][0]
+    q = q.reshape(B, S, H, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = x @ p["wkv_a"][0]                      # (B, S, kv_lora + rope)
+    c_kv = rmsnorm(kv_a[..., :m.kv_lora_rank], p["kv_norm"][0])
+    k_rope = apply_rope(kv_a[..., None, m.kv_lora_rank:],
+                        positions, cfg.rope_theta)   # (B, S, 1, rope)
+
+    if decode:
+        assert cache is not None and S == 1
+        ckv = jax.lax.dynamic_update_slice(
+            cache.k, c_kv.astype(cache.k.dtype), (0, cache.length, 0))
+        krc = jax.lax.dynamic_update_slice(
+            cache.v, k_rope[:, :, 0].astype(cache.v.dtype),
+            (0, cache.length, 0))
+        ckv = shd.constrain(ckv, "batch", "seq", None)
+        krc = shd.constrain(krc, "batch", "seq", None)
+        T = ckv.shape[1]
+        # absorbed attention: score against the compressed cache directly
+        q_abs = jnp.einsum("bqhn,khn->bqhk", q_nope.astype(jnp.float32),
+                           p["wk_b"][0].astype(jnp.float32))
+        s = jnp.einsum("bqhk,btk->bhqt", q_abs, ckv.astype(jnp.float32)) + \
+            jnp.einsum("bqhr,btr->bhqt", q_rope.astype(jnp.float32),
+                       krc.astype(jnp.float32))
+        s = s * scale
+        valid = jnp.arange(T) <= cache.length
+        pr = jax.nn.softmax(
+            jnp.where(valid[None, None, None, :], s, NEG_INF), axis=-1)
+        ctx = jnp.einsum("bhqt,btk->bqhk", pr, ckv.astype(jnp.float32))
+        o = jnp.einsum("bqhk,khv->bqhv", ctx,
+                       p["wv_b"][0].astype(jnp.float32))
+        o = o.reshape(B, 1, H * vd).astype(x.dtype)
+        new_cache = KVCache(ckv, krc, cache.length + 1)
+    else:
+        # prefill/train: expand per-head K/V (standard MLA formulation)
+        k_nope = jnp.einsum("btk,khn->bthn", c_kv, p["wk_b"][0])
+        v = jnp.einsum("btk,khv->bthv", c_kv, p["wv_b"][0])
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (B, S, H, rope))], axis=-1)
+        qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+        o = _flash_attend(qf, k, v, causal=cfg.causal, scale=scale,
+                          chunk=kv_chunk).reshape(B, S, H * vd)
+        if cache is not None:   # prefill: write into the S_max buffer
+            ckv = jax.lax.dynamic_update_slice(
+                cache.k, c_kv.astype(cache.k.dtype), (0, 0, 0))
+            krc = jax.lax.dynamic_update_slice(
+                cache.v, k_rope[:, :, 0].astype(cache.v.dtype), (0, 0, 0))
+            new_cache = KVCache(ckv, krc, jnp.int32(S))
+        else:
+            new_cache = None
+    out = o @ p["wo"][0]
+    return shd.constrain(out, "batch", None, None), new_cache

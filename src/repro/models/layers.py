@@ -1,0 +1,195 @@
+"""Shared model building blocks: params, sharding annotations, norms, RoPE."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Sharding: params/activations carry per-dim logical axes ("fsdp", "tp",
+# "batch", "seq", None). A Sharder maps logical -> physical mesh axes and
+# silently replicates any dim whose size does not divide the mesh axis
+# (e.g. smollm's 9 heads over a 16-way model axis).
+# ---------------------------------------------------------------------------
+
+DEFAULT_RULES = {
+    "fsdp": ("data",),
+    "tp": ("model",),
+    "batch": ("pod", "data"),   # pod axis folds into data parallelism
+    "seq": ("model",),          # sequence sharding for KV caches / long ctx
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Sharder:
+    mesh: Any = None            # jax Mesh or None (single-device smoke tests)
+    rules: Any = None
+
+    def _axes(self, logical: str | None, size: int):
+        if self.mesh is None or logical is None:
+            return None
+        axes = tuple(a for a in (self.rules or DEFAULT_RULES).get(logical, ())
+                     if a in self.mesh.shape)
+        if not axes:
+            return None
+        total = 1
+        for a in axes:
+            total *= self.mesh.shape[a]
+        if size % total != 0:
+            return None             # replicate: not evenly divisible
+        return axes if len(axes) > 1 else axes[0]
+
+    def spec(self, shape, logical) -> P:
+        assert len(shape) == len(logical), (shape, logical)
+        return P(*(self._axes(l, s) for s, l in zip(shape, logical)))
+
+    def constrain(self, x, *logical):
+        """with_sharding_constraint by logical dim names (no-op w/o mesh)."""
+        if self.mesh is None:
+            return x
+        sh = NamedSharding(self.mesh, self.spec(x.shape, logical))
+        return jax.lax.with_sharding_constraint(x, sh)
+
+    @property
+    def data_groups(self) -> int:
+        """Number of data-parallel shards (the MoE dispatch group count).
+
+        Sort/scatter token dispatch must stay LOCAL to a data shard: a
+        global argsort cannot be partitioned and makes XLA replicate
+        (tokens × d_model) tensors across the mesh (observed: 55 TB/device
+        of all-reduce on deepseek train_4k). Grouping by this count and
+        vmapping keeps every dispatch op shard-local.
+        """
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in (self.rules or DEFAULT_RULES).get("batch", ()):
+            if a in self.mesh.shape:
+                n *= self.mesh.shape[a]
+        return n
+
+
+# ---------------------------------------------------------------------------
+# Parameter trees: each leaf is a dict entry; a parallel tree of logical axes
+# is built at init so dryrun/train can derive PartitionSpecs without guessing.
+# ---------------------------------------------------------------------------
+
+class ParamFactory:
+    """Collects params + their logical axes; deterministic per-path init."""
+
+    def __init__(self, key: jax.Array, dtype=jnp.float32):
+        self.key = key
+        self.dtype = dtype
+
+    def _fold(self, path: str) -> jax.Array:
+        import zlib  # crc32: stable across processes (unlike str hash)
+        h = jnp.uint32(zlib.crc32(path.encode()) & 0x7FFFFFFF)
+        return jax.random.fold_in(self.key, h)
+
+    def dense(self, path: str, shape, logical, scale: float | None = None):
+        fan_in = shape[0] if len(shape) > 1 else shape[-1]
+        std = scale if scale is not None else fan_in ** -0.5
+        w = jax.random.normal(self._fold(path), shape, self.dtype) * std
+        return w, tuple(logical)
+
+    def zeros(self, path: str, shape, logical):
+        return jnp.zeros(shape, self.dtype), tuple(logical)
+
+    def ones(self, path: str, shape, logical):
+        return jnp.ones(shape, self.dtype), tuple(logical)
+
+
+def split_tree(tree):
+    """Split a tree of (param, logical) leaves into (params, logical_axes)."""
+    is_leaf = lambda x: isinstance(x, tuple) and len(x) == 2 and isinstance(
+        x[1], tuple) and all(isinstance(a, (str, type(None))) for a in x[1])
+    params = jax.tree.map(lambda x: x[0], tree, is_leaf=is_leaf)
+    axes = jax.tree.map(lambda x: x[1], tree, is_leaf=is_leaf)
+    return params, axes
+
+
+def stack_layer_trees(trees):
+    """Stack per-layer param trees along a new leading (scan) dimension."""
+    params = [t[0] for t in trees]
+    axes = trees[0][1]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *params)
+    axes = jax.tree.map(
+        lambda a: (None,) + a,
+        axes, is_leaf=lambda x: isinstance(x, tuple) and
+        all(isinstance(v, (str, type(None))) for v in x))
+    return stacked, axes
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations / rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, g, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(x32 * x32, -1, keepdims=True) + eps)
+    return (x32 * scale).astype(x.dtype) * g
+
+
+def layernorm(x, g, b, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, -1, keepdims=True)
+    var = jnp.mean((x32 - mu) ** 2, -1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * g + b
+
+
+def relu2(x):
+    r = jax.nn.relu(x)
+    return r * r
+
+
+ACTIVATIONS: dict[str, Callable] = {
+    "relu2": relu2,          # nemotron/minitron squared-ReLU
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+}
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """Table-free RoPE. x: (B, S, H, D); positions: (S,) int.
+
+    Frequencies are computed from positions directly — no (max_seq, D/2)
+    table, which matters at 524k context (and keeps seq-sharding local).
+    """
+    d = x.shape[-1]
+    inv = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    f = positions.astype(jnp.float32)[:, None] * inv[None, :]   # (S, D/2)
+    c = jnp.cos(f)[None, :, None, :]
+    s = jnp.sin(f)[None, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+def sinusoidal_pos(positions, d_model: int):
+    """Encoder positional embedding (stub for HuBERT's conv-pos frontend)."""
+    half = d_model // 2
+    inv = 1.0 / (10_000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    f = positions.astype(jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(f), jnp.cos(f)], axis=-1)
+
+
+def softmax_cross_entropy(logits, labels, z_loss: float = 0.0):
+    """Token CE with optional z-loss; logits f32-reduced.
+
+    The label logit is extracted with a masked reduction, NOT
+    take_along_axis: a vocab-sharded gather makes the SPMD partitioner
+    all-gather the full (B, S, V) logits (observed: 30 GiB/chip on the
+    135M dry-run); the masked sum partitions cleanly.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jnp.arange(logits.shape[-1], dtype=labels.dtype)
+    ll = jnp.sum(jnp.where(vocab_iota == labels[..., None], logits, 0.0),
+                 axis=-1)
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * lse ** 2
+    return loss

@@ -1,0 +1,151 @@
+"""Mamba2 (SSD — state-space duality) block: chunked train, recurrent decode.
+
+Training uses the SSD chunked algorithm (Dao & Gu 2024): within a chunk the
+recurrence is computed as a masked quadratic form (MXU-friendly), across
+chunks a short scan passes the (H, P, N) state. Decode keeps the state
+explicitly. Group count = 1 (B/C shared across heads), as in mamba2-370m.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamFactory, Sharder, rmsnorm
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array       # (B, H, P, N)
+    conv: jax.Array        # (B, d_conv-1, d_inner + 2*N) rolling conv input
+    length: jax.Array
+
+
+def init_mamba(pf: ParamFactory, path: str, cfg):
+    s, D = cfg.ssm, cfg.d_model
+    di, N, H = s.d_inner(D), s.d_state, s.n_heads(D)
+    conv_dim = di + 2 * N
+    return {
+        "in_proj": pf.dense(f"{path}.in_proj",
+                            (D, 2 * di + 2 * N + H), ("fsdp", "tp")),
+        "conv_w": pf.dense(f"{path}.conv_w", (s.d_conv, conv_dim),
+                           (None, "tp"), scale=s.d_conv ** -0.5),
+        "conv_b": pf.zeros(f"{path}.conv_b", (conv_dim,), ("tp",)),
+        "A_log": pf.ones(f"{path}.A_log", (H,), (None,)),
+        "dt_bias": pf.zeros(f"{path}.dt_bias", (H,), (None,)),
+        "D": pf.ones(f"{path}.D", (H,), (None,)),
+        "norm_g": pf.ones(f"{path}.norm_g", (di,), ("tp",)),
+        "out_proj": pf.dense(f"{path}.out_proj", (di, D), ("tp", "fsdp"),
+                             scale=di ** -0.5 / (2 * cfg.n_layers) ** 0.5),
+    }
+
+
+def _causal_conv(u, w, b, cache_conv=None):
+    """Depthwise causal conv1d. u: (B, S, C); w: (K, C)."""
+    K = w.shape[0]
+    if cache_conv is not None:                    # decode: S == 1
+        window = jnp.concatenate([cache_conv, u], axis=1)    # (B, K, C)
+        out = jnp.einsum("bkc,kc->bc", window, w)[:, None] + b
+        return jax.nn.silu(out), window[:, 1:]
+    pad = jnp.zeros_like(u[:, :K - 1])
+    up = jnp.concatenate([pad, u], axis=1)
+    out = sum(up[:, i:i + u.shape[1]] * w[i] for i in range(K)) + b
+    return jax.nn.silu(out), up[:, -(K - 1):] if K > 1 else None
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, chunk, init_state=None):
+    """SSD scan. xh: (B,S,H,P); dt: (B,S,H); Bm/Cm: (B,S,N).
+
+    Returns (y: (B,S,H,P), final_state: (B,H,P,N)).
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    # per-step decay: a_t = exp(-dt_t * A); work with the positive exponent
+    dA = dt * A[None, None, :]                    # (B,S,H) >= 0
+    dA_c = dA.reshape(Bsz, nc, chunk, H)
+    x_c = xh.reshape(Bsz, nc, chunk, H, P)
+    dt_c = dt.reshape(Bsz, nc, chunk, H)
+    B_c = Bm.reshape(Bsz, nc, chunk, N)
+    C_c = Cm.reshape(Bsz, nc, chunk, N)
+
+    cum = jnp.cumsum(dA_c, axis=2)                # (B,nc,Q,H) inclusive
+    total = cum[:, :, -1]                         # (B,nc,H)
+    # intra-chunk quadratic term: x_j's weight in h_i is prod_{l=j+1..i} a_l
+    # = exp(-(cum_i - cum_j)) for i >= j (own-step input is not decayed).
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,Q,H)
+    iq = jnp.arange(chunk)
+    causal = (iq[:, None] >= iq[None, :])[None, None, :, :, None]
+    # clamp BEFORE exp: masked entries have li < 0 and exp(-li) = inf,
+    # whose cotangent is inf*0 = NaN (the where-grad trap)
+    li = jnp.where(causal, li, 0.0)
+    L = jnp.where(causal, jnp.exp(-li), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", C_c, B_c)[..., None] * L \
+        * dt_c[:, :, None, :, :]                  # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, x_c)
+
+    # chunk-final states: sum_j exp(-(total - cum_j)) * dt_j * B_j x_j
+    decay_to_end = jnp.exp(cum - total[:, :, None])        # (B,nc,Q,H)
+    st = jnp.einsum("bcqh,bcqn,bcqhp->bchpn",
+                    decay_to_end * dt_c, B_c, x_c)         # per-chunk state
+
+    # scan across chunks: h_c = h_{c-1} * exp(-total_c) + st_c
+    def body(h, inp):
+        tot, s_c = inp
+        h_new = h * jnp.exp(-tot)[:, :, None, None] + s_c
+        return h_new, h            # emit PRE-chunk state
+    h0 = init_state if init_state is not None else \
+        jnp.zeros((Bsz, H, P, N), jnp.float32)
+    hT, h_prev = jax.lax.scan(
+        body, h0, (total.swapaxes(0, 1), st.swapaxes(0, 1).astype(jnp.float32)))
+    h_prev = h_prev.swapaxes(0, 1)                # (B,nc,H,P,N) pre-chunk
+
+    # inter-chunk contribution: y_i += C_i . (exp(-cum_i) * h_prev)
+    decay_from_start = jnp.exp(-cum)              # h_{-1} decayed through i
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
+                         C_c, decay_from_start, h_prev.astype(C_c.dtype))
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y, hT
+
+
+def mamba_apply(p, x, cfg, shd: Sharder, *,
+                cache: Optional[SSMCache] = None, decode: bool = False):
+    s, D = cfg.ssm, cfg.d_model
+    di, N, H, P = s.d_inner(D), s.d_state, s.n_heads(cfg.d_model), s.head_dim
+    B, S, _ = x.shape
+
+    zxbcdt = x @ p["in_proj"][0]
+    z, xbc, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
+    xbc = shd.constrain(xbc, "batch", None, "tp")
+
+    conv_cache = cache.conv if decode else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"][0], p["conv_b"][0],
+                                 conv_cache)
+    xh, Bm, Cm = jnp.split(xbc, [di, di + N], axis=-1)
+    xh = xh.reshape(B, S, H, P)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][0])
+    A = jnp.exp(p["A_log"][0].astype(jnp.float32))          # (H,) positive
+
+    if decode:
+        assert cache is not None and S == 1
+        dA = jnp.exp(-dt[:, 0] * A[None, :])                # (B,H)
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0], Bm[:, 0].astype(
+            jnp.float32), xh[:, 0].astype(jnp.float32))
+        h_new = cache.state * dA[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32),
+                       h_new)[:, None]                      # (B,1,H,P)
+        new_cache = SSMCache(h_new, new_conv, cache.length + 1)
+    else:
+        y, hT = _ssd_chunked(xh.astype(jnp.float32), dt, A,
+                             Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                             min(s.chunk, S))
+        new_cache = SSMCache(hT, new_conv, jnp.int32(S)) \
+            if cache is not None else None
+
+    y = y + xh.astype(jnp.float32) * p["D"][0][None, None, :, None]
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_g"][0])
+    out = y @ p["out_proj"][0]
+    return shd.constrain(out, "batch", None, None), new_cache

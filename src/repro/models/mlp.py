@@ -1,0 +1,170 @@
+"""MLPs: dense (SwiGLU / squared-ReLU / GELU) and MoE with flow routing.
+
+The MoE layer is where the paper's technique is a first-class feature:
+``cfg.moe.router == "flow"`` routes tokens with the capacity-constrained
+ε-auction from ``repro.core.routing`` (the assignment problem of §5 solved
+inside every MoE layer), ``"topk"`` is the standard baseline.
+
+Dispatch is sort-based (argsort by expert id + capacity-slot scatter), which
+keeps every shape static for pjit and maps to an all-to-all when experts are
+sharded over the model axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.routing import auction_route, topk_route
+from repro.models.layers import ACTIVATIONS, ParamFactory, Sharder
+
+
+def init_mlp(pf: ParamFactory, path: str, cfg, d_ff: int | None = None):
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    p = {
+        "w1": pf.dense(f"{path}.w1", (D, F), ("fsdp", "tp")),
+        "w2": pf.dense(f"{path}.w2", (F, D), ("tp", "fsdp"),
+                       scale=F ** -0.5 / (2 * cfg.n_layers) ** 0.5),
+    }
+    if cfg.gated_mlp:
+        p["w3"] = pf.dense(f"{path}.w3", (D, F), ("fsdp", "tp"))
+    return p
+
+
+def mlp_apply(p, x, cfg, shd: Sharder):
+    act = ACTIVATIONS[cfg.mlp_act]
+    h = act(x @ p["w1"][0])
+    if cfg.gated_mlp:
+        h = h * (x @ p["w3"][0])
+    h = shd.constrain(h, "batch", None, "tp")
+    return shd.constrain(h @ p["w2"][0], "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def init_moe(pf: ParamFactory, path: str, cfg):
+    e, D = cfg.moe, cfg.d_model
+    F = e.d_ff_expert
+    p = {
+        "gate": pf.dense(f"{path}.gate", (D, e.n_experts), ("fsdp", None),
+                         scale=D ** -0.5),
+        "w1": pf.dense(f"{path}.w1", (e.n_experts, D, F),
+                       ("tp", "fsdp", None)),
+        "w2": pf.dense(f"{path}.w2", (e.n_experts, F, D),
+                       ("tp", None, "fsdp"),
+                       scale=F ** -0.5 / (2 * cfg.n_layers) ** 0.5),
+    }
+    if cfg.gated_mlp:
+        p["w3"] = pf.dense(f"{path}.w3", (e.n_experts, D, F),
+                           ("tp", "fsdp", None))
+    if e.n_shared:
+        p["shared"] = init_mlp(pf, f"{path}.shared", cfg,
+                               d_ff=F * e.n_shared)
+    return p
+
+
+def _expert_ffn(buf, p, cfg):
+    """buf: (E, C, D) -> (E, C, D); per-expert matmuls on the MXU."""
+    act = ACTIVATIONS[cfg.mlp_act]
+    h = act(jnp.einsum("ecd,edf->ecf", buf, p["w1"][0]))
+    if cfg.gated_mlp:
+        h = h * jnp.einsum("ecd,edf->ecf", buf, p["w3"][0])
+    return jnp.einsum("ecf,efd->ecd", h, p["w2"][0])
+
+
+def _dispatch_group(xt, logits, combine_logits, p, cfg, *, k, capacity,
+                    decode):
+    """Dispatch + expert FFN + combine for ONE token group (vmapped).
+
+    Everything here (routing, argsort, capacity slots, scatter/gather) is
+    local to the group = local to one data shard after vmap, so none of it
+    generates cross-device traffic (DESIGN.md §5; the global-sort variant
+    cost 55 TB/device of all-reduce on deepseek train_4k).
+    """
+    e = cfg.moe
+    T, D = xt.shape
+    E = e.n_experts
+    if e.router == "flow" and not decode:
+        routing = auction_route(logits, k, capacity, n_iters=e.router_iters)
+    else:
+        routing = topk_route(logits, k, capacity)
+    disp = routing.dispatch                            # (T, E) bool
+    gates = jax.nn.softmax(jnp.where(disp, combine_logits, -1e9), axis=-1)
+    combine = jnp.where(disp, gates, 0.0).astype(xt.dtype)
+
+    choice_e = jnp.where(disp, jnp.arange(E)[None, :], E)
+    topv = jax.lax.top_k(-choice_e, k)[0]              # k smallest expert ids
+    flat_e = (-topv).reshape(-1)                       # (T*k,) expert or E
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st = flat_e[order], flat_t[order]
+    starts = jnp.searchsorted(se, jnp.arange(E + 1))
+    pos = jnp.arange(T * k) - starts[se.clip(0, E)]
+    ok = (se < E) & (pos < capacity)
+    se_c = jnp.where(ok, se, E)                        # OOB -> dropped
+    pos_c = jnp.where(ok, pos, 0)
+
+    buf = jnp.zeros((E, capacity, D), xt.dtype)
+    buf = buf.at[se_c, pos_c].set(xt[st], mode="drop")
+
+    out_buf = _expert_ffn(buf, p, cfg)
+
+    gathered = out_buf[se_c, pos_c]                    # (T*k, D)
+    wts = jnp.take_along_axis(combine[st], se_c[:, None], 1)[:, 0]
+    contrib = jnp.where(ok[:, None], gathered * wts[:, None], 0.0)
+    return jnp.zeros((T, D), xt.dtype).at[st].add(contrib)
+
+
+def moe_apply(p, x, cfg, shd: Sharder, decode: bool = False):
+    """x: (B, S, D) -> (B, S, D). Group-local capacity-padded dispatch.
+
+    decode=True routes plain top-k with capacity == T (no truncation):
+    capacity coupling across tokens would make decode disagree with the
+    batched forward pass, and at serve time balance is a latency concern,
+    not a correctness one.
+    """
+    import functools
+    import math
+    e = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    E, k = e.n_experts, e.top_k
+    G = math.gcd(shd.data_groups, T)
+    Tg = T // G
+    if decode:
+        capacity = Tg
+    else:
+        capacity = min(max(1, int(Tg * k / E * e.capacity_factor)), Tg)
+
+    xt = x.reshape(G, Tg, D)
+    xt = shd.constrain(xt, "batch", None, None)
+    logits = (xt @ p["gate"][0]).astype(jnp.float32)   # (G, Tg, E)
+    # Routing decisions are discrete: compute them under stop_gradient
+    # (gradients reach the gate only through the combine softmax; this also
+    # avoids differentiating through argsort/top_k, which this jaxlib
+    # cannot transpose inside scan).
+    logits_sg = jax.lax.stop_gradient(logits)
+
+    group_fn = functools.partial(_dispatch_group, p=p, cfg=cfg, k=k,
+                                 capacity=capacity, decode=decode)
+    out = jax.vmap(group_fn)(xt, logits_sg, logits)    # (G, Tg, D)
+    out = shd.constrain(out, "batch", None, None)
+
+    if e.n_shared:
+        out = out + mlp_apply(p["shared"], xt, cfg, shd)
+    out = out.reshape(B, S, D)
+    return shd.constrain(out, "batch", None, None)
+
+
+def moe_aux_metrics(p, x, cfg):
+    """Load-balance diagnostics for benchmarks (not used in the loss)."""
+    e = cfg.moe
+    T = x.shape[0] * x.shape[1]
+    logits = (x.reshape(T, -1) @ p["gate"][0]).astype(jnp.float32)
+    capacity = max(1, int(T * e.top_k / e.n_experts * e.capacity_factor))
+    r = (auction_route(logits, e.top_k, capacity) if e.router == "flow"
+         else topk_route(logits, e.top_k, capacity))
+    load = r.demand / jnp.maximum(1, jnp.sum(r.demand))
+    return {"max_load": jnp.max(r.demand), "routed": jnp.sum(r.dispatch),
+            "load_cv": jnp.std(load) / jnp.maximum(jnp.mean(load), 1e-9)}

@@ -1,0 +1,325 @@
+"""LM assembly: layer plan -> scan-over-periods -> logits, for all families.
+
+Heterogeneous stacks (jamba's 1:7 attn:mamba interleave with alternating MoE,
+deepseek's dense-FFN first layer) are handled by finding the repeating
+*period* of the layer plan: the period's sublayers are unrolled inside the
+scan body, the scan runs over stacked period parameters. This keeps the HLO
+size O(period) instead of O(n_layers) — essential for 96-layer dry-runs.
+
+Convention: module ``init_*`` functions return trees whose leaves are
+``(array, logical_axes)`` pairs; ``split_tree`` separates them into a params
+tree (arrays) and an axes tree (tuples) at the top level. ``apply_model``
+takes both and re-pairs lazily (axes are static, so they are closed over —
+never traced through ``lax.scan``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import mlp as mlp_mod
+from repro.models.attention import KVCache, KVCacheQ
+from repro.models.mamba import SSMCache
+from repro.models.layers import (ParamFactory, Sharder, layernorm, rmsnorm,
+                                 sinusoidal_pos, split_tree)
+
+
+def _is_axes(x):
+    return isinstance(x, tuple) and all(
+        isinstance(v, (str, type(None))) for v in x)
+
+
+def _is_pair(x):
+    return isinstance(x, tuple) and len(x) == 2 and _is_axes(x[1])
+
+
+def zip_axes(params, axes):
+    """Re-pair a params tree with its (static) logical-axes tree."""
+    leaves, treedef = jax.tree.flatten(params)
+    alist = treedef.flatten_up_to(axes)
+    return jax.tree.unflatten(treedef, list(zip(leaves, alist)))
+
+
+def stack_pair_trees(trees):
+    """Stack per-period pair-trees along a new leading (scan) axis."""
+    def stack(*leaves):
+        return (jnp.stack([l[0] for l in leaves], 0),
+                (None,) + leaves[0][1])
+    return jax.tree.map(stack, *trees, is_leaf=_is_pair)
+
+
+# ---------------------------------------------------------------------------
+# Layer plan
+# ---------------------------------------------------------------------------
+
+def layer_plan(cfg: ModelConfig) -> list[tuple[str, str | None]]:
+    plan = []
+    for i in range(cfg.n_layers):
+        if cfg.family == "ssm":
+            mixer = "mamba"
+        elif cfg.family == "hybrid":
+            mixer = "attn" if i % cfg.attn_period == 0 else "mamba"
+        else:
+            mixer = "attn"
+        if (cfg.moe is not None and i >= cfg.n_dense_prefix
+                and (i - cfg.n_dense_prefix) % cfg.moe.every == 0):
+            ffn = "moe"
+        elif cfg.d_ff:
+            ffn = "mlp"
+        else:
+            ffn = None
+        plan.append((mixer, ffn))
+    return plan
+
+
+def plan_period(cfg: ModelConfig) -> int:
+    period = cfg.attn_period if cfg.family == "hybrid" else 1
+    if cfg.moe is not None:
+        period = math.lcm(period, cfg.moe.every)
+    assert (cfg.n_layers - cfg.n_dense_prefix) % period == 0, cfg.name
+    return period
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_norm(pf, path, cfg, d=None):
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"g": pf.ones(f"{path}.g", (d,), (None,)),
+                "b": pf.zeros(f"{path}.b", (d,), (None,))}
+    return {"g": pf.ones(f"{path}.g", (d,), (None,))}
+
+
+def _apply_norm(p, x, cfg):
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["g"][0], p["b"][0])
+    return rmsnorm(x, p["g"][0])
+
+
+def _init_sublayer(pf, path, cfg, spec):
+    mixer, ffn = spec
+    p: dict[str, Any] = {"norm1": _init_norm(pf, f"{path}.norm1", cfg)}
+    if mixer == "attn":
+        init = attn_mod.init_mla if cfg.attn_type == "mla" \
+            else attn_mod.init_gqa
+        p["mixer"] = init(pf, f"{path}.attn", cfg)
+    else:
+        p["mixer"] = mamba_mod.init_mamba(pf, f"{path}.mamba", cfg)
+    if ffn:
+        p["norm2"] = _init_norm(pf, f"{path}.norm2", cfg)
+        p["ffn"] = (mlp_mod.init_moe if ffn == "moe" else mlp_mod.init_mlp)(
+            pf, f"{path}.{ffn}", cfg)
+    return p
+
+
+def init_model(cfg: ModelConfig, key: jax.Array, dtype=jnp.float32):
+    """Returns (params, logical_axes): two aligned trees of plain leaves."""
+    pf = ParamFactory(key, dtype)
+    plan = layer_plan(cfg)
+    period = plan_period(cfg)
+    n_periods = (cfg.n_layers - cfg.n_dense_prefix) // period
+
+    tree: dict[str, Any] = {}
+    if cfg.frontend_dim:
+        tree["frontend"] = pf.dense(
+            "frontend", (cfg.frontend_dim, cfg.d_model), (None, "fsdp"))
+    # d^-0.5 embedding scale keeps tied-head logits ~N(0,1) at init
+    # (scale=1.0 gave init CE ~100 instead of ln V on tied archs)
+    tree["embed"] = pf.dense("embed", (cfg.vocab, cfg.d_model),
+                             ("tp", "fsdp"), scale=cfg.d_model ** -0.5)
+    tree["prefix"] = [
+        _init_sublayer(pf, f"prefix{i}", cfg, plan[i])
+        for i in range(cfg.n_dense_prefix)]
+    period_trees = [
+        {f"sub{j}": _init_sublayer(
+            pf, f"body{r}.sub{j}", cfg, plan[cfg.n_dense_prefix + j])
+         for j in range(period)}
+        for r in range(n_periods)]
+    tree["body"] = stack_pair_trees(period_trees)
+    tree["final_norm"] = _init_norm(pf, "final_norm", cfg)
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = pf.dense("lm_head", (cfg.d_model, cfg.vocab),
+                                   ("fsdp", "tp"))
+    return split_tree(tree)
+
+
+# ---------------------------------------------------------------------------
+# Apply
+# ---------------------------------------------------------------------------
+
+class ModelOutput(NamedTuple):
+    logits: jax.Array
+    caches: Any
+
+
+def _apply_sublayer(p, x, cfg, shd, spec, *, positions, cache, decode):
+    mixer, ffn = spec
+    h = _apply_norm(p["norm1"], x, cfg)
+    if mixer == "attn":
+        fn = attn_mod.mla_apply if cfg.attn_type == "mla" \
+            else attn_mod.gqa_apply
+        mo, new_cache = fn(p["mixer"], h, cfg, shd, positions=positions,
+                           cache=cache, decode=decode)
+    else:
+        mo, new_cache = mamba_mod.mamba_apply(p["mixer"], h, cfg, shd,
+                                              cache=cache, decode=decode)
+    x = x + mo
+    if ffn == "moe":
+        h = _apply_norm(p["norm2"], x, cfg)
+        x = x + mlp_mod.moe_apply(p["ffn"], h, cfg, shd, decode=decode)
+    elif ffn == "mlp":
+        h = _apply_norm(p["norm2"], x, cfg)
+        x = x + mlp_mod.mlp_apply(p["ffn"], h, cfg, shd)
+    return x, new_cache
+
+
+def apply_model(params, axes, cfg: ModelConfig, shd: Sharder, batch,
+                *, caches=None, decode: bool = False, pos_offset=0,
+                logits_mode: str = "all") -> ModelOutput:
+    """batch: {"tokens": (B,S) int} or {"embeds": (B,S,frontend_dim)}."""
+    plan = layer_plan(cfg)
+    period = plan_period(cfg)
+    pairs = zip_axes(params, axes)            # top-level lazy pairing
+
+    if cfg.frontend_dim:
+        x = batch["embeds"].astype(pairs["frontend"][0].dtype) \
+            @ pairs["frontend"][0]
+    else:
+        x = jnp.take(pairs["embed"][0], batch["tokens"], axis=0)
+    x = shd.constrain(x, "batch", None, None)
+    S = x.shape[1]
+    positions = pos_offset + jnp.arange(S)
+    if not cfg.causal and not cfg.rope_theta:
+        x = x + sinusoidal_pos(positions, cfg.d_model)[None].astype(x.dtype)
+
+    new_prefix_caches = []
+    for i in range(cfg.n_dense_prefix):
+        c = caches["prefix"][i] if caches else None
+        x, nc = _apply_sublayer(pairs["prefix"][i], x, cfg, shd, plan[i],
+                                positions=positions, cache=c, decode=decode)
+        new_prefix_caches.append(nc)
+
+    body_specs = [plan[cfg.n_dense_prefix + j] for j in range(period)]
+    body_axes_inner = jax.tree.map(lambda a: a[1:], axes["body"],
+                                   is_leaf=_is_axes)
+
+    def body_fn(x, scanned):
+        pp_arrays, cc = scanned
+        pp = zip_axes(pp_arrays, body_axes_inner)
+        new_cc = []
+        for j in range(period):
+            cj = cc[j] if cc is not None else None
+            x, ncj = _apply_sublayer(pp[f"sub{j}"], x, cfg, shd,
+                                     body_specs[j], positions=positions,
+                                     cache=cj, decode=decode)
+            new_cc.append(ncj)
+        return x, (tuple(new_cc) if cc is not None else None)
+
+    if cfg.remat == "full":
+        body_fn = jax.checkpoint(
+            body_fn, policy=jax.checkpoint_policies.nothing_saveable)
+    elif cfg.remat == "dots":
+        body_fn = jax.checkpoint(
+            body_fn,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    body_caches = caches["body"] if caches else None
+    x, new_body_caches = jax.lax.scan(
+        body_fn, x, (params["body"], body_caches))
+
+    x = _apply_norm(pairs["final_norm"], x, cfg)
+    if logits_mode == "last":
+        x = x[:, -1:]
+    if cfg.tie_embeddings:
+        logits = x @ pairs["embed"][0].T
+    else:
+        logits = x @ pairs["lm_head"][0]
+    logits = shd.constrain(logits, "batch", None, "tp")
+    new_caches = {"prefix": new_prefix_caches, "body": new_body_caches} \
+        if caches is not None else None
+    return ModelOutput(logits, new_caches)
+
+
+# ---------------------------------------------------------------------------
+# Caches (layout + logical axes, mirrored trees)
+# ---------------------------------------------------------------------------
+
+def _layer_cache(cfg, spec, B, S_max, dtype):
+    """Returns (cache, logical) — aligned NamedTuples."""
+    mixer, _ = spec
+    if mixer == "attn":
+        if cfg.attn_type == "mla":
+            m = cfg.mla
+            c = KVCache(jnp.zeros((B, S_max, m.kv_lora_rank), dtype),
+                        jnp.zeros((B, S_max, m.qk_rope_dim), dtype),
+                        jnp.int32(0))
+            a = KVCache(("batch", "seq", None), ("batch", "seq", None), ())
+        elif cfg.kv_quant:
+            c = KVCacheQ(
+                jnp.zeros((B, S_max, cfg.n_kv_heads, cfg.dh), jnp.int8),
+                jnp.zeros((B, S_max, cfg.n_kv_heads, 1), jnp.float32),
+                jnp.zeros((B, S_max, cfg.n_kv_heads, cfg.dh), jnp.int8),
+                jnp.zeros((B, S_max, cfg.n_kv_heads, 1), jnp.float32),
+                jnp.int32(0))
+            a = KVCacheQ(("batch", "seq", None, None),
+                         ("batch", "seq", None, None),
+                         ("batch", "seq", None, None),
+                         ("batch", "seq", None, None), ())
+        else:
+            c = KVCache(
+                jnp.zeros((B, S_max, cfg.n_kv_heads, cfg.dh), dtype),
+                jnp.zeros((B, S_max, cfg.n_kv_heads, cfg.dh), dtype),
+                jnp.int32(0))
+            a = KVCache(("batch", "seq", None, None),
+                        ("batch", "seq", None, None), ())
+        return c, a
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    c = SSMCache(
+        jnp.zeros((B, s.n_heads(cfg.d_model), s.head_dim, s.d_state),
+                  jnp.float32),
+        jnp.zeros((B, s.d_conv - 1, di + 2 * s.d_state), dtype),
+        jnp.int32(0))
+    a = SSMCache(("batch", None, None, None), ("batch", None, "tp"), ())
+    return c, a
+
+
+def init_caches(cfg: ModelConfig, B: int, S_max: int, dtype=jnp.bfloat16):
+    """Returns (caches, logical_axes) — aligned trees."""
+    plan = layer_plan(cfg)
+    period = plan_period(cfg)
+    n_periods = (cfg.n_layers - cfg.n_dense_prefix) // period
+    prefix, prefix_a = [], []
+    for i in range(cfg.n_dense_prefix):
+        c, a = _layer_cache(cfg, plan[i], B, S_max, dtype)
+        prefix.append(c)
+        prefix_a.append(a)
+    per, per_a = [], []
+    for j in range(period):
+        c, a = _layer_cache(cfg, plan[cfg.n_dense_prefix + j], B, S_max,
+                            dtype)
+        per.append(c)
+        per_a.append(a)
+    body = jax.tree.map(
+        lambda x: jnp.zeros((n_periods,) + x.shape, x.dtype), tuple(per))
+    body_a = jax.tree.map(lambda a: (None,) + a if a else (None,),
+                          tuple(per_a), is_leaf=_is_axes)
+    return ({"prefix": prefix, "body": body},
+            {"prefix": prefix_a, "body": body_a})
+
+
+def cache_specs(cfg, shd: Sharder, caches, cache_axes):
+    """PartitionSpec tree for a cache tree."""
+    leaves, treedef = jax.tree.flatten(caches)
+    alist = treedef.flatten_up_to(cache_axes)
+    return jax.tree.unflatten(
+        treedef,
+        [shd.spec(l.shape, a) for l, a in zip(leaves, alist)])

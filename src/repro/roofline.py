@@ -1,0 +1,123 @@
+"""Roofline analysis from compiled dry-run artifacts (TPU v5e targets).
+
+Three terms per (arch × shape × mesh), all in seconds:
+
+    compute    = HLO_FLOPs / (chips · 197 TFLOP/s bf16)
+    memory     = HLO_bytes_accessed / (chips · 819 GB/s HBM)
+    collective = Σ collective operand bytes / (chips · 50 GB/s ICI link)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``; collective bytes are NOT
+in cost_analysis — they are parsed from the HLO text by summing the shaped
+outputs of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op. cost_analysis sums over all devices' work in SPMD, so
+both numerators are whole-step quantities and the division by `chips`
+normalizes to per-chip wall time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12          # bf16 per chip, TPU v5e
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\][^ ]*))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.I)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Bytes moved by each collective kind (sum of output shapes)."""
+    out: dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape, kind = m.group(1), m.group(2).lower()
+        out[kind] = out.get(kind, 0) + _shape_bytes(shape)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops: float
+    bytes_accessed: float
+    coll_bytes: float
+    coll_breakdown: dict
+    model_flops: float          # 6·N_active·tokens (theory)
+    bytes_per_chip: float       # peak memory per device (memory_analysis)
+
+    # NOTE: flops/bytes/coll_bytes are PER-DEVICE program quantities (the
+    # SPMD module is per-chip); whole-step totals are these × chips. The
+    # spec formulas divide global HLO numbers by chips — identical result.
+    @property
+    def t_compute(self):
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self):
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self):
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self):
+        t = {"compute": self.t_compute, "memory": self.t_memory,
+             "collective": self.t_collective}
+        return max(t, key=t.get)
+
+    @property
+    def useful_flops_frac(self):
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_frac(self):
+        """Fraction of the compute roofline the step achieves if every term
+        overlaps perfectly: model_flops time / max(all terms)."""
+        t_model = self.model_flops / (self.chips * PEAK_FLOPS)
+        t_step = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_model / t_step if t_step else 0.0
+
+    def row(self):
+        return (f"| {self.arch} | {self.shape} | {self.mesh} | "
+                f"{self.t_compute*1e3:.1f} | {self.t_memory*1e3:.1f} | "
+                f"{self.t_collective*1e3:.1f} | {self.bottleneck} | "
+                f"{self.useful_flops_frac:.2f} | {self.roofline_frac:.2f} |")
+
+
+def model_flops_for(cfg, shape_info) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE) for train; 2·N for decode/prefill
+    forward-only (per generated/processed token)."""
+    S, B = shape_info["seq_len"], shape_info["global_batch"]
+    n_active = cfg.active_param_count()
+    if shape_info["kind"] == "train":
+        tokens = S * B
+        return 6.0 * n_active * tokens
+    if shape_info["kind"] == "prefill":
+        return 2.0 * n_active * S * B
+    return 2.0 * n_active * B          # decode: one token per request

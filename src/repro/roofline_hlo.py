@@ -1,0 +1,224 @@
+"""Trip-count-exact roofline accounting from post-optimization HLO text.
+
+``compiled.cost_analysis()`` counts every while (= lax.scan) body ONCE, so a
+96-layer model's FLOPs are undercounted ~96x. This parser rebuilds the call
+graph (entry -> while bodies -> fusions), multiplies by each while op's
+``known_trip_count`` (emitted by XLA for counted loops), and accumulates:
+
+  * flops        — 2·prod(out)·K per dot (matmul-dominated workloads)
+  * bytes        — Σ (operands + output) at non-fused op boundaries
+  * collectives  — output bytes per all-gather/all-reduce/reduce-scatter/
+                   all-to-all/collective-permute, per kind
+
+All numbers are whole-program per-step (SPMD: the per-device program times
+the device count happens in the roofline terms' denominators).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_OP_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s*([\w\-]+)\((.*)$")
+_REF_RE = re.compile(r"%([\w.\-]+)")
+_CALLED_ONE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
+_CALLED_LIST = re.compile(r"(?:branch_computations|called_computations)="
+                          r"\{([^}]*)\}")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CDIM = re.compile(r"lhs_contracting_dims=\{([0-9,]+)\}")
+_LHS_BATCH = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+
+
+def _shape_list(s: str):
+    return [( dt, [int(d) for d in dims.split(",") if d])
+            for dt, dims in _SHAPE_RE.findall(s)]
+
+
+def _shape_bytes(s: str) -> int:
+    total = 0
+    for dt, dims in _shape_list(s):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+@dataclass
+class Op:
+    name: str
+    out_shape: str
+    opcode: str
+    rest: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)   # op name -> out_shape str
+
+
+def parse_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur = None
+    for line in hlo.splitlines():
+        m = _COMP_HDR.match(line)
+        if m:
+            cur = Computation(m.group(1))
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        om = _OP_RE.match(line)
+        if om:
+            op = Op(om.group(1), om.group(2), om.group(3), om.group(4))
+            cur.ops.append(op)
+            cur.shapes[op.name] = op.out_shape
+    return comps
+
+
+def _entry_name(hlo: str) -> str | None:
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR.match(line)
+            if m:
+                return m.group(1)
+    return None
+
+
+def _callees(op: Op) -> list[str]:
+    names = [m.group(1) for m in _CALLED_ONE.finditer(op.rest)]
+    for m in _CALLED_LIST.finditer(op.rest):
+        for n in m.group(1).split(","):
+            n = n.strip().lstrip("%")
+            if n:
+                names.append(n)
+    return names
+
+
+def multipliers(comps: dict[str, Computation], entry: str) -> dict[str, float]:
+    """Execution count per computation via BFS over the call graph."""
+    mult: dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    # process in topological-ish order (HLO call graphs are acyclic)
+    i = 0
+    while i < len(order):
+        name = order[i]
+        i += 1
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        for op in comp.ops:
+            callees = _callees(op)
+            if not callees:
+                continue
+            factor = 1.0
+            if op.opcode == "while":
+                t = _TRIP.search(op.rest)
+                factor = float(t.group(1)) if t else 1.0
+            for c in callees:
+                mult[c] += mult[name] * factor
+                if c not in seen:
+                    seen.add(c)
+                    order.append(c)
+    return dict(mult)
+
+
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "while", "conditional", "call",
+               "custom-call", "partition-id", "replica-id",
+               # layout/elementwise ops the TPU compiler fuses into
+               # neighbours; on the CPU-backend HLO real elementwise work
+               # already sits at fusion boundaries (wrapped_*/fused_*), so
+               # counting these raw ops would double-count traffic
+               "copy", "convert", "transpose", "reshape", "broadcast",
+               "iota", "compare", "select", "add", "subtract", "multiply",
+               "divide", "exponential", "negate", "maximum", "minimum",
+               "slice", "concatenate", "pad", "copy-start", "copy-done"}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out = _shape_list(op.out_shape)
+    if not out:
+        return 0.0
+    _, out_dims = out[0]
+    n_out = 1
+    for d in out_dims:
+        n_out *= d
+    # contracting size: resolve the lhs operand's shape via the symbol
+    # table (post-optimization HLO references operands by %name only)
+    cd = _CDIM.search(op.rest)
+    refs = _REF_RE.findall(op.rest.split(")")[0])
+    lhs_dims = None
+    if refs and refs[0] in comp.shapes:
+        sl = _shape_list(comp.shapes[refs[0]])
+        if sl:
+            lhs_dims = sl[0][1]
+    if lhs_dims is None or not cd:
+        return 2.0 * n_out  # degenerate fallback
+    k = 1
+    for idx in (int(x) for x in cd.group(1).split(",")):
+        if idx < len(lhs_dims):
+            k *= lhs_dims[idx]
+    return 2.0 * n_out * k
+
+
+def analyze(hlo: str) -> dict:
+    comps = parse_computations(hlo)
+    entry = _entry_name(hlo)
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "collective_bytes": 0.0,
+                "collectives": {}}
+    mult = multipliers(comps, entry)
+    # fusion computations' interiors must not count toward bytes
+    fusion_comps = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "fusion":
+                fusion_comps.update(_callees(op))
+
+    flops = 0.0
+    bytes_acc = 0.0
+    colls: dict[str, float] = defaultdict(float)
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m == 0.0:
+            continue
+        in_fusion = comp.name in fusion_comps
+        for op in comp.ops:
+            code = op.opcode
+            if code in ("dot", "convolution"):
+                flops += m * _dot_flops(op, comp)
+            if in_fusion:
+                continue
+            base = code.replace("-start", "")
+            if base in _COLLECTIVES:
+                b = _shape_bytes(op.out_shape)
+                colls[base] += m * b
+                bytes_acc += m * b
+                continue
+            if code in _SKIP_BYTES or code.endswith("-done"):
+                continue
+            b = _shape_bytes(op.out_shape)
+            for ref in _REF_RE.findall(op.rest.split(")")[0]):
+                sh = comp.shapes.get(ref)
+                if sh:
+                    b += _shape_bytes(sh)
+            bytes_acc += m * b
+    return {"flops": flops, "bytes": bytes_acc,
+            "collective_bytes": float(sum(colls.values())),
+            "collectives": dict(colls)}

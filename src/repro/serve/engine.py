@@ -1,0 +1,67 @@
+"""Serving: prefill + decode steps with batched requests.
+
+``serve_step`` is what the decode_* / long_* dry-run shapes lower: one new
+token for every request in the batch against a full KV/SSM cache.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Sharder
+from repro.models.model import apply_model, init_caches
+
+
+class ServeState(NamedTuple):
+    caches: Any
+    last_tokens: jax.Array    # (B,) most recent token per request
+    lengths: jax.Array        # (B,) current sequence lengths
+
+
+def make_prefill_step(cfg: ModelConfig, axes, cache_axes, shd: Sharder):
+    def prefill(params, tokens, caches):
+        """tokens: (B, S). Returns (first generated token, ServeState)."""
+        out = apply_model(params, axes, cfg, shd, {"tokens": tokens},
+                          caches=caches, logits_mode="last")
+        nxt = jnp.argmax(out.logits[:, -1], axis=-1).astype(jnp.int32)
+        B, S = tokens.shape
+        return nxt, ServeState(out.caches, nxt,
+                               jnp.full((B,), S, jnp.int32))
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig, axes, shd: Sharder,
+                    pos_offset: int | None = None):
+    """Decode one token for the whole batch (the dry-run `serve_step`).
+
+    pos_offset=None reads the position from state.lengths (traced), so one
+    compiled step serves every decode position.
+    """
+    def serve_step(params, state: ServeState):
+        off = state.lengths[0] if pos_offset is None else pos_offset
+        out = apply_model(params, axes, cfg, shd,
+                          {"tokens": state.last_tokens[:, None]},
+                          caches=state.caches, decode=True,
+                          pos_offset=off, logits_mode="last")
+        nxt = jnp.argmax(out.logits[:, -1], axis=-1).astype(jnp.int32)
+        return nxt, ServeState(out.caches, nxt, state.lengths + 1)
+    return serve_step
+
+
+def greedy_generate(cfg, params, axes, shd, prompt_tokens, max_new: int,
+                    S_max: int | None = None):
+    """Reference end-to-end generation loop (examples/tests)."""
+    B, S = prompt_tokens.shape
+    S_max = S_max or (S + max_new + 1)
+    caches, _ = init_caches(cfg, B, S_max, dtype=jnp.float32)
+    prefill = make_prefill_step(cfg, axes, None, shd)
+    nxt, state = prefill(params, prompt_tokens, caches)
+    step = make_serve_step(cfg, axes, shd)
+    toks = [nxt]
+    for _ in range(max_new - 1):
+        nxt, state = step(params, state)
+        toks.append(nxt)
+    return jnp.stack(toks, axis=1)

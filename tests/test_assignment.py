@@ -1,0 +1,80 @@
+"""Cost-scaling assignment vs Hungarian oracle + ε-optimality (paper §5)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.assignment.cost_scaling import solve_assignment
+from repro.core.assignment.ref import (eps_optimal, optimal_weight,
+                                       optimal_weight_bruteforce)
+
+
+@pytest.mark.parametrize("method", ["pushrelabel", "auction"])
+@pytest.mark.parametrize("seed", range(4))
+def test_assignment_optimal(method, seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 24))
+    w = rng.integers(0, 101, size=(n, n))
+    res = solve_assignment(jnp.asarray(w), method=method)
+    assert bool(res.converged)
+    assert int(res.weight) == optimal_weight(w)
+    # a perfect matching (permutation)
+    assert sorted(np.asarray(res.col_of_row).tolist()) == list(range(n))
+
+
+def test_assignment_negative_and_tiny():
+    rng = np.random.default_rng(9)
+    w = rng.integers(-50, 51, size=(6, 6))
+    res = solve_assignment(jnp.asarray(w))
+    assert int(res.weight) == optimal_weight(w)
+    assert int(res.weight) == optimal_weight_bruteforce(np.asarray(w))
+    w1 = np.asarray([[7]])
+    assert int(solve_assignment(jnp.asarray(w1)).weight) == 7
+
+
+@pytest.mark.parametrize("kw", [
+    dict(use_price_update=False, use_arc_fixing=False),
+    dict(use_price_update=True, use_arc_fixing=False),
+    dict(use_price_update=False, use_arc_fixing=True),
+    dict(method="pushrelabel", rounds_per_heuristic=4),
+])
+def test_assignment_heuristic_ablations(kw):
+    rng = np.random.default_rng(1)
+    w = rng.integers(0, 101, size=(12, 12))
+    res = solve_assignment(jnp.asarray(w), **kw)
+    assert int(res.weight) == optimal_weight(w)
+
+
+def test_assignment_pallas_backend():
+    rng = np.random.default_rng(2)
+    w = rng.integers(0, 101, size=(16, 16))
+    for method in ["pushrelabel", "auction"]:
+        res = solve_assignment(jnp.asarray(w), method=method,
+                               backend="pallas")
+        assert int(res.weight) == optimal_weight(w)
+
+
+def test_paper_operating_point():
+    """Paper §6: complete bipartite, |X|=|Y|<=30, costs <= 100."""
+    rng = np.random.default_rng(2011)
+    w = rng.integers(0, 101, size=(30, 30))
+    res = solve_assignment(jnp.asarray(w), method="pushrelabel")
+    assert int(res.weight) == optimal_weight(w)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 12),
+       st.sampled_from(["pushrelabel", "auction"]))
+def test_assignment_property(seed, n, method):
+    """Property: optimality + the auction invariant that prices of Y only
+    decrease (paper Lemma 5.2 in Goldberg price coordinates)."""
+    rng = np.random.default_rng(seed)
+    w = rng.integers(0, 64, size=(n, n))
+    res = solve_assignment(jnp.asarray(w), method=method)
+    assert bool(res.converged)
+    assert int(res.weight) == optimal_weight(w)
+    # final pseudoflow is 1-optimal wrt final prices (scaled costs)
+    F = np.zeros((n, n), np.int32)
+    F[np.arange(n), np.asarray(res.col_of_row)] = 1
+    assert eps_optimal(w, F, np.asarray(res.p_x), np.asarray(res.p_y),
+                       eps=1)

@@ -1,0 +1,41 @@
+"""Pallas flash-attention kernel vs oracle: shape/dtype/GQA sweeps."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@pytest.mark.parametrize("dims,blocks,causal", [
+    ((2, 64, 4, 2, 16, 16), (16, 32), True),
+    ((1, 128, 6, 3, 32, 16), (64, 32), False),
+    ((2, 256, 8, 8, 64, 64), (128, 128), True),
+    ((1, 64, 4, 1, 16, 8), (64, 64), True),     # MQA
+    ((1, 512, 2, 2, 32, 32), (256, 512), True), # single k block row
+])
+def test_flash_kernel_sweep(dims, blocks, causal):
+    B, S, H, KV, dh, dv = dims
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(B, S, H, dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, S, KV, dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, S, KV, dv)).astype(np.float32))
+    out = flash_attention_fwd(q, k, v, causal=causal, block_q=blocks[0],
+                              block_k=blocks[1], interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_flash_kernel_bf16():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(2, 64, 4, 16)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(2, 64, 2, 16)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(2, 64, 2, 16)), jnp.bfloat16)
+    out = flash_attention_fwd(q, k, v, causal=True, block_q=32, block_k=32,
+                              interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=2e-2, atol=2e-2)

@@ -1,0 +1,43 @@
+"""CLI launcher smoke tests (subprocess: the actual production entrypoints)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ENV = {**os.environ, "PYTHONPATH": "src"}
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args, timeout=900):
+    return subprocess.run([sys.executable, "-m", *args], cwd=ROOT, env=ENV,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+@pytest.mark.slow
+def test_train_cli_with_resume(tmp_path):
+    base = ["repro.launch.train", "--arch", "smollm-135m", "--smoke",
+            "--batch", "2", "--seq", "32", "--ckpt-dir", str(tmp_path),
+            "--ckpt-every", "3", "--resume", "auto"]
+    r1 = _run(base + ["--steps", "4"])
+    assert r1.returncode == 0, r1.stderr[-2000:]
+    assert "[ckpt]" in r1.stdout
+    r2 = _run(base + ["--steps", "6"])
+    assert r2.returncode == 0, r2.stderr[-2000:]
+    assert "[resume] restored step" in r2.stdout
+
+
+@pytest.mark.slow
+def test_serve_cli():
+    r = _run(["repro.launch.serve", "--arch", "smollm-135m", "--smoke",
+              "--batch", "2", "--prompt-len", "8", "--max-new", "4"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "decode:" in r.stdout
+
+
+@pytest.mark.slow
+def test_dryrun_cli_single_cell():
+    r = _run(["repro.launch.dryrun", "--arch", "smollm-135m", "--shape",
+              "decode_32k"], timeout=1800)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "[ok] smollm-135m/decode_32k" in r.stdout

@@ -1,0 +1,141 @@
+"""Per-arch smoke tests: reduced configs, forward + train step + decode."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, list_configs, smoke_variant
+from repro.models.layers import Sharder
+from repro.models.model import (apply_model, init_caches, init_model,
+                                layer_plan, plan_period)
+from repro.optim.adamw import AdamWConfig
+from repro.train.step import TrainConfig, init_train_state, make_train_step
+
+SHD = Sharder()
+KEY = jax.random.PRNGKey(0)
+ARCHS = list_configs()
+
+
+def _batch(cfg, B=2, S=32, seed=0):
+    rng = np.random.default_rng(seed)
+    if cfg.frontend_dim:
+        return {"embeds": jnp.asarray(rng.normal(
+                    size=(B, S, cfg.frontend_dim)).astype(np.float32)),
+                "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)),
+                                      jnp.int32)}
+    toks = rng.integers(0, cfg.vocab, (B, S + 1))
+    return {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+            "labels": jnp.asarray(toks[:, 1:], jnp.int32)}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward(arch):
+    cfg = smoke_variant(get_config(arch))
+    params, axes = init_model(cfg, KEY)
+    batch = _batch(cfg)
+    out = apply_model(params, axes, cfg, SHD, batch)
+    B, S = batch["labels"].shape
+    assert out.logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(out.logits)))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = smoke_variant(get_config(arch))
+    params, axes = init_model(cfg, KEY)
+    tcfg = TrainConfig(optimizer=AdamWConfig(warmup_steps=2, decay_steps=10))
+    state = init_train_state(cfg, tcfg, params)
+    step = jax.jit(make_train_step(cfg, axes, tcfg, SHD))
+    batch = _batch(cfg)
+    state, m = step(state, batch)
+    assert np.isfinite(float(m["loss"]))
+    state, m2 = step(state, batch)      # second step: params moved, no NaNs
+    assert np.isfinite(float(m2["loss"]))
+    assert float(m2["loss"]) != float(m["loss"])
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS
+                                  if get_config(a).family != "encoder"])
+def test_smoke_decode_consistency(arch):
+    cfg = smoke_variant(get_config(arch))
+    params, axes = init_model(cfg, KEY)
+    rng = np.random.default_rng(0)
+    B, S = 2, 16
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    full = apply_model(params, axes, cfg, SHD, {"tokens": toks})
+    caches, _ = init_caches(cfg, B, S_max=S + 4, dtype=jnp.float32)
+    pre = apply_model(params, axes, cfg, SHD, {"tokens": toks[:, :S - 1]},
+                      caches=caches)
+    dec = apply_model(params, axes, cfg, SHD, {"tokens": toks[:, S - 1:]},
+                      caches=pre.caches, decode=True, pos_offset=S - 1)
+    a = np.asarray(full.logits[:, -1])
+    b = np.asarray(dec.logits[:, 0])
+    err = np.abs(a - b).max() / (np.abs(a).max() + 1e-9)
+    # MoE/hybrid: capacity truncation in the batched forward may drop a
+    # token the (uncapped) decode path routes -> small expected skew.
+    tol = 2e-2 if cfg.moe is not None else 3e-3
+    assert err < tol, f"{arch}: {err}"
+
+
+def test_layer_plans():
+    ds = get_config("deepseek-v2-236b")
+    plan = layer_plan(ds)
+    assert plan[0] == ("attn", "mlp") and plan[1] == ("attn", "moe")
+    assert plan_period(ds) == 1
+    jb = get_config("jamba-v0.1-52b")
+    plan = layer_plan(jb)
+    assert plan_period(jb) == 8
+    assert [m for m, _ in plan[:8]] == ["attn"] + ["mamba"] * 7
+    assert [f for _, f in plan[:4]] == ["moe", "mlp", "moe", "mlp"]
+    mb = get_config("mamba2-370m")
+    assert all(m == "mamba" and f is None for m, f in layer_plan(mb))
+
+
+def test_param_counts_in_range():
+    """Config param counts should be near the advertised model sizes."""
+    expect = {
+        "nemotron-4-340b": (300e9, 380e9),
+        "minitron-8b": (7e9, 10e9),
+        "smollm-135m": (120e6, 150e6),
+        "command-r-plus-104b": (95e9, 115e9),
+        "deepseek-v2-236b": (200e9, 260e9),
+        "phi3.5-moe-42b-a6.6b": (38e9, 46e9),
+        "mamba2-370m": (300e6, 440e6),
+        "jamba-v0.1-52b": (45e9, 60e9),
+        "chameleon-34b": (30e9, 38e9),
+        "hubert-xlarge": (0.8e9, 1.2e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}," \
+                              f"{hi/1e9}]B"
+
+
+def test_moe_active_params():
+    ds = get_config("deepseek-v2-236b")
+    assert ds.active_param_count() < 0.2 * ds.param_count()
+    phi = get_config("phi3.5-moe-42b-a6.6b")
+    frac = phi.active_param_count() / phi.param_count()
+    assert 0.1 < frac < 0.25            # ~6.6/42
+
+
+def test_kv_quant_decode_consistency():
+    """int8 KV cache: decode matches full forward within quant tolerance."""
+    cfg = dataclasses.replace(smoke_variant(get_config("smollm-135m")),
+                              kv_quant=True)
+    params, axes = init_model(cfg, KEY)
+    rng = np.random.default_rng(0)
+    B, S = 2, 16
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    full = apply_model(params, axes, cfg, SHD, {"tokens": toks})
+    caches, _ = init_caches(cfg, B, S_max=S + 4, dtype=jnp.float32)
+    pre = apply_model(params, axes, cfg, SHD, {"tokens": toks[:, :S - 1]},
+                      caches=caches)
+    dec = apply_model(params, axes, cfg, SHD, {"tokens": toks[:, S - 1:]},
+                      caches=pre.caches, decode=True, pos_offset=S - 1)
+    a = np.asarray(full.logits[:, -1])
+    b = np.asarray(dec.logits[:, 0])
+    err = np.abs(a - b).max() / (np.abs(a).max() + 1e-9)
+    assert err < 5e-2, err              # int8 KV quantization tolerance

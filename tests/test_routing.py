@@ -1,0 +1,92 @@
+"""Flow-based MoE routing: feasibility, balance, optimality (integration)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from scipy.optimize import linear_sum_assignment
+
+from repro.core.routing import auction_route, exact_route, topk_route
+
+
+def _scores(seed, T, E):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(T, E)).astype(np.float32))
+
+
+def test_exact_route_is_optimal():
+    T, E = 64, 8
+    cap = T // E
+    s = _scores(0, T, E)
+    w = np.repeat(np.asarray(s), cap, axis=1)
+    r_, c_ = linear_sum_assignment(w, maximize=True)
+    opt = w[r_, c_].sum()
+    r = exact_route(s, cap)
+    val = float((np.asarray(s) * np.asarray(r.dispatch)).sum())
+    assert abs(val - opt) < 1e-3
+    assert int(np.asarray(r.dispatch).sum()) == T          # zero drops
+
+
+def test_auction_route_beats_topk_on_drops():
+    T, E, k = 128, 8, 1
+    cap = T // E
+    s = _scores(1, T, E)
+    rt = topk_route(s, k, cap)
+    ra = auction_route(s, k, cap, n_iters=16)
+    dropped_topk = T - int(np.asarray(rt.dispatch).sum())
+    dropped_auct = T - int(np.asarray(ra.dispatch).sum())
+    assert dropped_auct <= dropped_topk
+    assert dropped_auct == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 8), st.integers(1, 3),
+       st.integers(8, 64))
+def test_routing_feasibility_property(seed, E, k, T):
+    """Property: never exceed per-token k nor per-expert capacity."""
+    k = min(k, E)
+    cap = max(1, int(T * k / E * 1.25))
+    s = _scores(seed, T, E)
+    for r in (topk_route(s, k, cap), auction_route(s, k, cap)):
+        d = np.asarray(r.dispatch)
+        assert d.sum(axis=0).max() <= cap
+        assert d.sum(axis=1).max() <= k
+        c = np.asarray(r.combine)
+        assert (c[~d] == 0).all()
+        assert np.isfinite(c).all()
+
+
+def test_flow_router_better_balance():
+    """Skewed logits: flow routing caps hot experts, topk truncates."""
+    rng = np.random.default_rng(5)
+    T, E, k = 256, 8, 2
+    s = rng.normal(size=(T, E)).astype(np.float32)
+    s[:, 0] += 3.0                      # everyone loves expert 0
+    cap = int(T * k / E * 1.25)
+    rt = topk_route(jnp.asarray(s), k, cap)
+    ra = auction_route(jnp.asarray(s), k, cap, n_iters=16)
+    routed_t = int(np.asarray(rt.dispatch).sum())
+    routed_a = int(np.asarray(ra.dispatch).sum())
+    assert routed_a >= routed_t          # auction re-routes the overflow
+
+
+def test_transportation_exact():
+    """solve_transportation: feasible + matches scipy on slot expansion."""
+    import numpy as np
+    from repro.core.routing import solve_transportation
+    rng = np.random.default_rng(0)
+    n_x, n_y = 12, 4
+    w = rng.integers(0, 50, (n_x, n_y))
+    supply = np.full(n_x, 2)            # k=2 per token
+    capacity = np.full(n_y, 8)          # expert capacity
+    flow, res = solve_transportation(jnp.asarray(w), supply, capacity)
+    f = np.asarray(flow)
+    assert (f.sum(1) == supply).all()
+    assert (f.sum(0) <= capacity).all()
+    got = (f * w).sum()
+    # oracle: scipy on the same slot expansion
+    rows = np.repeat(np.arange(n_x), supply)
+    cols = np.repeat(np.arange(n_y), capacity)
+    big = np.zeros((capacity.sum(), capacity.sum()))
+    big[:len(rows), :] = w[rows][:, cols]
+    r_, c_ = linear_sum_assignment(big, maximize=True)
+    assert got == int(big[r_, c_].sum())
