@@ -8,9 +8,10 @@ from __future__ import annotations
 
 import sys
 
-from benchmarks.bench_flow import (bench_assignment, bench_flash_kernel,
-                                   bench_kernels, bench_maxflow,
-                                   bench_refine_ops, bench_routing)
+from benchmarks.bench_flow import (bench_assignment, bench_batched,
+                                   bench_flash_kernel, bench_kernels,
+                                   bench_maxflow, bench_refine_ops,
+                                   bench_routing)
 
 
 def main() -> None:
@@ -18,6 +19,7 @@ def main() -> None:
     only = sys.argv[1] if len(sys.argv) > 1 else None
     benches = {
         "maxflow": bench_maxflow,
+        "batched": bench_batched,
         "assignment": bench_assignment,
         "refine_ops": bench_refine_ops,
         "routing": bench_routing,

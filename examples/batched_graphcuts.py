@@ -1,0 +1,76 @@
+"""Batched graph-cut segmentation — many images, ONE solver dispatch.
+
+The serving-shaped version of examples/graphcut_segmentation.py: a mini
+"request queue" of synthetic frames (ragged sizes included) is segmented by
+the batched multi-instance engine of ``repro.core.batch``. Ragged frames are
+zero-capacity padded to a bucket shape (value-preserving — padded pixels are
+inert), every bucket is one ``maxflow_grid_batch`` dispatch, and per-instance
+convergence masks let early-converging frames idle while the hardest frame
+finishes, instead of serializing one jitted call per frame.
+
+    PYTHONPATH=src python examples/batched_graphcuts.py
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, "src")
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import jax
+import numpy as np
+
+from repro.core.batch import solve_maxflow_batch
+from repro.core.maxflow.grid import maxflow_grid
+
+from graphcut_segmentation import build_grid_cut, synth_image
+
+
+def request_queue():
+    """Eight frames at three resolutions (a ragged mini-batch of requests)."""
+    frames = []
+    for i, (H, W) in enumerate([(64, 64), (64, 64), (48, 64), (64, 64),
+                                (32, 32), (48, 64), (64, 64), (32, 32)]):
+        img, truth = synth_image(H, W, seed=i)
+        frames.append((build_grid_cut(img), truth))
+    return frames
+
+
+def main():
+    frames = request_queue()
+    probs = [p for p, _ in frames]
+
+    # warm up both paths (first call traces + compiles), then time the
+    # steady-state dispatch with the results actually materialized
+    jax.block_until_ready(solve_maxflow_batch(probs, bucket="max"))
+    jax.block_until_ready([maxflow_grid(p) for p in probs])
+
+    t0 = time.perf_counter()
+    results = jax.block_until_ready(solve_maxflow_batch(probs, bucket="max"))
+    batch_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    solo = jax.block_until_ready([maxflow_grid(p) for p in probs])
+    solo_s = time.perf_counter() - t0
+
+    print(f"{len(frames)} frames, bucket='max' (one dispatch)")
+    print(f"batched wall: {batch_s:.2f}s   "
+          f"({len(frames) / batch_s:.1f} inst/s)")
+    print(f"looped wall : {solo_s:.2f}s   "
+          f"({len(frames) / solo_s:.1f} inst/s, one jitted call per frame)")
+    for i, ((_, truth), r) in enumerate(zip(frames, results)):
+        seg = ~np.asarray(r.cut)               # source side = foreground
+        iou = (seg & truth).sum() / max((seg | truth).sum(), 1)
+        print(f"frame {i}: shape={truth.shape} flow={float(r.flow):8.0f} "
+              f"rounds={int(r.rounds):4d} converged={bool(r.converged)} "
+              f"IoU={iou:.3f}")
+        assert bool(r.converged)
+        assert iou > 0.80, "segmentation should recover the blob"
+    # the padded batched solve is the same optimum the solo solver finds
+    for r, s in zip(results, solo):
+        assert float(r.flow) == float(s.flow)
+    print("all frames: batched flows equal solo flows")
+
+
+if __name__ == "__main__":
+    main()

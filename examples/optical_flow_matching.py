@@ -39,6 +39,7 @@ def main():
     solve_assignment(jnp.asarray(w), method="auction")  # compile warmup
     t0 = time.perf_counter()
     res = solve_assignment(jnp.asarray(w), method="auction")
+    assert bool(res.converged)  # else col_of_row may hold the >=n sentinel
     match = np.asarray(res.col_of_row)
     dt = time.perf_counter() - t0
     # correct match for row i is the j with perm[j] == i

@@ -25,6 +25,15 @@ Beyond-paper variant: ``refine="auction"`` fuses push+relabel into a top-2
 bid (Bertsekas auction, equivalent ε-scaling semantics) which converges in
 fewer Jacobi rounds; the paper-faithful ``refine="pushrelabel"`` is the
 baseline recorded in EXPERIMENTS.md.
+
+Batching: every function is shape-polymorphic over leading batch axes —
+``w`` may be ``(n, n)`` or ``(B, n, n)``, with prices ``(..., n)``, counters
+``(...,)`` and ε carried per instance. The scalar loop predicates become
+liveness masks: an instance that reaches a perfect matching (or finishes its
+ε-scaling schedule, which depends on its own max|c|) is frozen via a select
+while the rest of the batch keeps refining, so batched results bit-match a
+loop of single-instance solves. ``solve_assignment`` accepts both ranks; the
+pad-and-bucket front end for ragged batches lives in ``repro.core.batch``.
 """
 from __future__ import annotations
 
@@ -38,13 +47,15 @@ INF = jnp.int32(2 ** 30)
 
 
 class AssignmentResult(NamedTuple):
-    col_of_row: jax.Array   # (n,) int32: matched y for each x
-    weight: jax.Array       # total matching weight (original scale)
+    col_of_row: jax.Array   # (..., n) int32: matched y for each x; the
+    #                         sentinel n marks an UNMATCHED row (only
+    #                         possible when converged is False)
+    weight: jax.Array       # (...,) total matching weight (original scale)
     p_x: jax.Array
     p_y: jax.Array
-    rounds: jax.Array       # total Jacobi rounds across all refines
-    pushes: jax.Array       # total push operations (paper's op-count metric)
-    relabels: jax.Array     # total relabel operations
+    rounds: jax.Array       # (...,) total Jacobi rounds across all refines
+    pushes: jax.Array       # (...,) total pushes (paper's op-count metric)
+    relabels: jax.Array     # (...,) total relabel operations
     converged: jax.Array
 
 
@@ -62,50 +73,68 @@ def _masked(c, fixed):
     return jnp.where(fixed, INF, c)
 
 
+def _exp(eps, k: int):
+    """ε with k broadcast axes appended: per-instance ε against (..., n[, n])."""
+    eps = jnp.asarray(eps)
+    return eps.reshape(eps.shape + (1,) * k)
+
+
+def _freeze(live, new: _RefineState, old: _RefineState) -> _RefineState:
+    """Keep ``old`` leaves where ``live`` is False (per-instance no-op)."""
+    from repro.core.masking import freeze
+    return freeze(live, new, old)
+
+
 def _round_pushrelabel(c, eps, st: _RefineState, *,
                        backend: str = "xla") -> _RefineState:
     """One Jacobi round of Algorithm 5.4 over all active nodes of both sides."""
     F, p_x, p_y, fixed = st.F, st.p_x, st.p_y, st.fixed
-    n = c.shape[0]
+    e1 = _exp(eps, 1)
 
-    row_sum = jnp.sum(F, axis=1)
-    col_sum = jnp.sum(F, axis=0)
+    row_sum = jnp.sum(F, axis=-1)
+    col_sum = jnp.sum(F, axis=-2)
     active_x = row_sum == 0            # e(x) = 1
     active_y = col_sum > 1             # e(y) > 0
 
     # ---- X side: min part-reduced cost over residual (x,y) = unmatched arcs.
     if backend == "pallas":  # the paper's hot loop as the bidding kernel
         from repro.kernels.bidding.ops import bidding_op
-        min_cpx, arg_x, _ = bidding_op(c, p_y, fixed | (F == 1))
+        op = bidding_op
+        for _ in range(c.ndim - 2):  # one vmap per leading batch axis
+            op = jax.vmap(op)
+        min_cpx, arg_x, _ = op(c, p_y, fixed | (F == 1))
     else:
-        cpx = _masked(c - p_y[None, :], fixed)
+        cpx = _masked(c - p_y[..., None, :], fixed)
         cpx = jnp.where(F == 1, INF, cpx)        # residual X->Y iff F == 0
-        min_cpx = jnp.min(cpx, axis=1)
-        arg_x = jnp.argmin(cpx, axis=1)
+        min_cpx = jnp.min(cpx, axis=-1)
+        arg_x = jnp.argmin(cpx, axis=-1)
     admis_x = min_cpx < -p_x                     # c_p(x, ỹ) < 0 (line 11)
     push_x = active_x & admis_x & (min_cpx < INF)
     relab_x = active_x & ~admis_x & (min_cpx < INF)
-    p_x = jnp.where(relab_x, -(min_cpx + eps), p_x)     # line 18
+    p_x = jnp.where(relab_x, -(min_cpx + e1), p_x)      # line 18
 
     # ---- Y side: residual (y,x) iff F[x,y] == 1; c'_p(y,x) = -c(x,y) - p(x).
-    cpy = jnp.where(F == 1, -c - p_x[:, None], INF)     # (x, y) layout
-    min_cpy = jnp.min(cpy, axis=0)
-    arg_y = jnp.argmin(cpy, axis=0)
+    cpy = jnp.where(F == 1, -c - p_x[..., :, None], INF)    # (x, y) layout
+    min_cpy = jnp.min(cpy, axis=-2)
+    arg_y = jnp.argmin(cpy, axis=-2)
     admis_y = min_cpy < -p_y
     push_y = active_y & admis_y & (min_cpy < INF)
     relab_y = active_y & ~admis_y & (min_cpy < INF)
-    p_y = jnp.where(relab_y, -(min_cpy + eps), p_y)
+    p_y = jnp.where(relab_y, -(min_cpy + e1), p_y)
 
     # ---- fulfillment: apply all unit pushes at once (disjoint F entries).
-    add = (jax.nn.one_hot(arg_x, n, dtype=F.dtype) * push_x[:, None].astype(F.dtype))
-    rem = (jax.nn.one_hot(arg_y, n, dtype=F.dtype).T * push_y[None, :].astype(F.dtype))
+    n = c.shape[-1]
+    add = (jax.nn.one_hot(arg_x, n, dtype=F.dtype)
+           * push_x[..., :, None].astype(F.dtype))
+    rem = (jnp.swapaxes(jax.nn.one_hot(arg_y, n, dtype=F.dtype), -1, -2)
+           * push_y[..., None, :].astype(F.dtype))
     F = jnp.clip(F + add - rem, 0, 1)
 
     return _RefineState(
         F=F, p_x=p_x, p_y=p_y, fixed=fixed,
         rounds=st.rounds + 1,
-        pushes=st.pushes + jnp.sum(push_x) + jnp.sum(push_y),
-        relabels=st.relabels + jnp.sum(relab_x) + jnp.sum(relab_y),
+        pushes=st.pushes + jnp.sum(push_x, -1) + jnp.sum(push_y, -1),
+        relabels=st.relabels + jnp.sum(relab_x, -1) + jnp.sum(relab_y, -1),
     )
 
 
@@ -120,46 +149,51 @@ def _round_auction(c, eps, st: _RefineState, *,
     fewer rounds to ε-optimality, same invariants.
     """
     F, p_x, p_y, fixed = st.F, st.p_x, st.p_y, st.fixed
-    n = c.shape[0]
+    n = c.shape[-1]
 
-    row_sum = jnp.sum(F, axis=1)
+    row_sum = jnp.sum(F, axis=-1)
     active_x = row_sum == 0
 
     if backend == "pallas":  # top-2 bid via the bidding kernel
         from repro.kernels.bidding.ops import bidding_op
-        min1, arg1, min2 = bidding_op(c, p_y, fixed)
+        op = bidding_op
+        for _ in range(c.ndim - 2):  # one vmap per leading batch axis
+            op = jax.vmap(op)
+        min1, arg1, min2 = op(c, p_y, fixed)
     else:
-        cpx = _masked(c - p_y[None, :], fixed)   # part-reduced costs
-        min1 = jnp.min(cpx, axis=1)
-        arg1 = jnp.argmin(cpx, axis=1)
-        cpx2 = cpx.at[jnp.arange(n), arg1].set(INF)
-        min2 = jnp.min(cpx2, axis=1)
+        cpx = _masked(c - p_y[..., None, :], fixed)  # part-reduced costs
+        min1 = jnp.min(cpx, axis=-1)
+        arg1 = jnp.argmin(cpx, axis=-1)
+        cpx2 = jnp.where(jax.nn.one_hot(arg1, n, dtype=bool), INF, cpx)
+        min2 = jnp.min(cpx2, axis=-1)
     min2 = jnp.where(min2 >= INF, min1, min2)    # single-candidate rows
 
     # x is willing to lower p(ỹ)'s attractiveness gap: the winning reduced
     # cost after the bid equals (second best) + ε below nothing — i.e. the
     # new own-price of x would be -(min2 + eps). The bid strength (lower is
     # stronger) is min1 - (min2 + eps) <= -eps < 0.
-    bid_strength = min1 - min2 - eps             # < 0, more negative = stronger
+    bid_strength = min1 - min2 - _exp(eps, 1)    # < 0, more negative = stronger
     bids = jnp.where(
-        (jnp.arange(n)[None, :] == arg1[:, None]) & active_x[:, None],
-        bid_strength[:, None], INF)
-    best_bid = jnp.min(bids, axis=0)
-    winner = jnp.argmin(bids, axis=0)
+        (jnp.arange(n) == arg1[..., :, None]) & active_x[..., :, None],
+        bid_strength[..., :, None], INF)
+    best_bid = jnp.min(bids, axis=-2)
+    winner = jnp.argmin(bids, axis=-2)
     got_bid = best_bid < INF
 
     # y accepts the winner: previous owner (if any) is evicted.
-    new_match = jax.nn.one_hot(winner, n, dtype=F.dtype, axis=0) \
-        * got_bid[None, :].astype(F.dtype)
-    F = F * (~got_bid)[None, :].astype(F.dtype) + new_match
+    new_match = jax.nn.one_hot(winner, n, dtype=F.dtype, axis=-2) \
+        * got_bid[..., None, :].astype(F.dtype)
+    F = F * (~got_bid)[..., None, :].astype(F.dtype) + new_match
     # price update on won columns: p(y) absorbs the bid (Bertsekas raise,
     # expressed in Goldberg price coordinates: p_y strictly decreases by >=ε).
     p_y = jnp.where(got_bid, p_y + best_bid, p_y)
     # the winner's own price moves as the later relabel would (ε-CS witness).
-    won = active_x & (winner[arg1] == jnp.arange(n)) & jnp.take(got_bid, arg1)
-    p_x = jnp.where(won, -(min2 + eps), p_x)
+    winner_at = jnp.take_along_axis(winner, arg1, axis=-1)
+    won = active_x & (winner_at == jnp.arange(n)) \
+        & jnp.take_along_axis(got_bid, arg1, axis=-1)
+    p_x = jnp.where(won, -(min2 + _exp(eps, 1)), p_x)
 
-    n_push = jnp.sum(got_bid)
+    n_push = jnp.sum(got_bid, axis=-1)
     return _RefineState(
         F=F, p_x=p_x, p_y=p_y, fixed=fixed,
         rounds=st.rounds + 1,
@@ -169,8 +203,11 @@ def _round_auction(c, eps, st: _RefineState, *,
 
 
 def _is_perfect(F):
-    return (jnp.sum(F) == F.shape[0]) & jnp.all(jnp.sum(F, axis=0) <= 1) \
-        & jnp.all(jnp.sum(F, axis=1) <= 1)
+    """Per-instance perfect-matching predicate: scalar or (B,) bool."""
+    n = F.shape[-1]
+    return (jnp.sum(F, axis=(-2, -1)) == n) \
+        & jnp.all(jnp.sum(F, axis=-2) <= 1, axis=-1) \
+        & jnp.all(jnp.sum(F, axis=-1) <= 1, axis=-1)
 
 
 def price_update(c, eps, st: _RefineState, max_sweeps: int) -> _RefineState:
@@ -181,23 +218,24 @@ def price_update(c, eps, st: _RefineState, max_sweeps: int) -> _RefineState:
     max(0, floor(c_p(v,w)/ε) + 1) — identical to the Dial-bucket numbers.
     """
     F, p_x, p_y = st.F, st.p_x, st.p_y
+    e1, e2 = _exp(eps, 1), _exp(eps, 2)
     INF_D = jnp.int32(2 ** 26)  # distance infinity (sums stay in int32)
-    deficit_y = jnp.sum(F, axis=0) == 0
+    deficit_y = jnp.sum(F, axis=-2) == 0
     l_y0 = jnp.where(deficit_y, 0, INF_D)
 
-    cp_xy = _masked(c + p_x[:, None] - p_y[None, :], st.fixed)  # reduced costs
-    len_xy = jnp.minimum(jnp.maximum(0, cp_xy // eps + 1), INF_D)  # arc X->Y
+    cp_xy = _masked(c + p_x[..., :, None] - p_y[..., None, :], st.fixed)
+    len_xy = jnp.minimum(jnp.maximum(0, cp_xy // e2 + 1), INF_D)  # arc X->Y
     len_xy = jnp.where((F == 0) & (cp_xy < INF), len_xy, INF_D)
-    cp_yx = -c + p_y[None, :] - p_x[:, None]
+    cp_yx = -c + p_y[..., None, :] - p_x[..., :, None]
     len_yx = jnp.where(F == 1, jnp.minimum(
-        jnp.maximum(0, cp_yx // eps + 1), INF_D), INF_D)
+        jnp.maximum(0, cp_yx // e2 + 1), INF_D), INF_D)
 
     def body(carry):
         l_x, l_y, _, it = carry
-        nl_x = jnp.min(jnp.minimum(len_xy + l_y[None, :], INF_D), 1)
+        nl_x = jnp.min(jnp.minimum(len_xy + l_y[..., None, :], INF_D), -1)
         nl_x = jnp.minimum(l_x, nl_x)
         # y relaxes through residual (y, x) arcs using the fresh l_x
-        nl_y = jnp.min(jnp.minimum(len_yx + nl_x[:, None], INF_D), 0)
+        nl_y = jnp.min(jnp.minimum(len_yx + nl_x[..., :, None], INF_D), -2)
         nl_y = jnp.minimum(jnp.minimum(l_y, nl_y), l_y0)
         changed = jnp.any(nl_x != l_x) | jnp.any(nl_y != l_y)
         return nl_x, nl_y, changed, it + 1
@@ -210,22 +248,34 @@ def price_update(c, eps, st: _RefineState, max_sweeps: int) -> _RefineState:
                      jnp.int32(0)))
 
     reach_x, reach_y = l_x < INF_D, l_y < INF_D
-    last = jnp.maximum(jnp.max(jnp.where(reach_x, l_x, 0)),
-                       jnp.max(jnp.where(reach_y, l_y, 0)))
-    l_x = jnp.where(reach_x, l_x, last + 1)
-    l_y = jnp.where(reach_y, l_y, last + 1)
-    return st._replace(p_x=st.p_x - eps * l_x, p_y=st.p_y - eps * l_y)
+    last = jnp.maximum(jnp.max(jnp.where(reach_x, l_x, 0), axis=-1),
+                       jnp.max(jnp.where(reach_y, l_y, 0), axis=-1))
+    l_x = jnp.where(reach_x, l_x, last[..., None] + 1)
+    l_y = jnp.where(reach_y, l_y, last[..., None] + 1)
+    return st._replace(p_x=st.p_x - e1 * l_x, p_y=st.p_y - e1 * l_y)
 
 
 def _refine(c, eps, st: _RefineState, *, method: str, max_rounds: int,
             rounds_per_heuristic: int, use_price_update: bool,
-            use_arc_fixing: bool, backend: str = "xla") -> _RefineState:
-    """Paper Algorithm 5.2: strip the flow, reprice X, push/relabel to a flow."""
-    n = c.shape[0]
+            use_arc_fixing: bool, backend: str = "xla",
+            live=None) -> _RefineState:
+    """Paper Algorithm 5.2: strip the flow, reprice X, push/relabel to a flow.
+
+    The while-loop predicate is per-instance: an instance whose pseudoflow is
+    already a perfect matching is frozen (its state selected through
+    unchanged) while the rest of the batch keeps refining. ``live`` (from the
+    ε-scaling caller) excludes instances that already finished their schedule
+    — their (discarded) garbage state must not keep the loop spinning.
+    """
+    n = c.shape[-1]
     # lines 3-6: F <- 0; p(x) <- -min_y (c'_p(x,y) + eps)
     st = st._replace(F=jnp.zeros_like(st.F))
-    cpx = _masked(c - st.p_y[None, :], st.fixed)
-    st = st._replace(p_x=-(jnp.min(cpx, axis=1) + eps))
+    cpx = _masked(c - st.p_y[..., None, :], st.fixed)
+    st = st._replace(p_x=-(jnp.min(cpx, axis=-1) + _exp(eps, 1)))
+
+    def unfinished(F):
+        u = ~_is_perfect(F)
+        return u if live is None else u & live
 
     round_fn = functools.partial(
         {"pushrelabel": _round_pushrelabel,
@@ -233,20 +283,28 @@ def _refine(c, eps, st: _RefineState, *, method: str, max_rounds: int,
 
     def body(carry):
         st, k = carry
+        run = unfinished(st.F)
 
         def inner(_, s):
             return round_fn(c, eps, s)
 
-        st = jax.lax.fori_loop(0, rounds_per_heuristic, inner, st)
+        new = jax.lax.fori_loop(0, rounds_per_heuristic, inner, st)
         if use_price_update:
-            st = jax.lax.cond(
-                _is_perfect(st.F), lambda s: s,
-                lambda s: price_update(c, eps, s, max_sweeps=2 * n), st)
+            perf = _is_perfect(new.F)
+            if perf.ndim == 0:  # single instance: genuinely skip the sweep
+                new = jax.lax.cond(
+                    perf, lambda s: s,
+                    lambda s: price_update(c, eps, s, max_sweeps=2 * n), new)
+            else:
+                new = _freeze(~perf,
+                              price_update(c, eps, new, max_sweeps=2 * n),
+                              new)
+        st = _freeze(run, new, st)
         return st, k + rounds_per_heuristic
 
     def cond(carry):
         st, k = carry
-        return ~_is_perfect(st.F) & (k < max_rounds)
+        return jnp.any(unfinished(st.F)) & (k < max_rounds)
 
     st, _ = jax.lax.while_loop(cond, body, (st, jnp.int32(0)))
 
@@ -257,8 +315,9 @@ def _refine(c, eps, st: _RefineState, *, method: str, max_rounds: int,
         # subsequent refines. (Matched arcs always satisfy |c_p| <= ε, so only
         # F == 0 arcs can be fixed; the mask replaces the paper's
         # adjacency-list deletion with flow = -10 sentinels.)
-        cp = c + st.p_x[:, None] - st.p_y[None, :]
-        st = st._replace(fixed=st.fixed | ((cp > 2 * n * eps) & (st.F == 0)))
+        cp = c + st.p_x[..., :, None] - st.p_y[..., None, :]
+        st = st._replace(
+            fixed=st.fixed | ((cp > 2 * n * _exp(eps, 2)) & (st.F == 0)))
     return st
 
 
@@ -281,18 +340,28 @@ def solve_assignment(
     ``alpha=10`` is the paper's scaling factor (§5.5). Integer weights only
     (exactness of the (n+1)-scaling argument); floats should be pre-quantized
     by the caller. Requires n·(n+1)·max|w| within int32 range.
+
+    ``w`` may be ``(n, n)`` (one instance) or ``(B, n, n)`` (a batch solved
+    in one dispatch — see ``repro.core.batch.solve_assignment_batch`` for the
+    list-of-matrices front end). Each instance runs its own ε-scaling
+    schedule (ε starts at that instance's max|c|); instances that finish
+    early are frozen by liveness masks, so batched results bit-match a loop
+    of single-instance solves.
     """
-    n = w.shape[0]
+    n = w.shape[-1]
     w_i = jnp.asarray(w, jnp.int32)
+    batch = w_i.shape[:-2]
     c = -(n + 1) * w_i                                   # minimization form
-    C = jnp.maximum(jnp.max(jnp.abs(c)), 1)
+    C = jnp.maximum(jnp.max(jnp.abs(c), axis=(-2, -1)), 1)   # (...,) per inst
 
     st = _RefineState(
-        F=jnp.zeros((n, n), jnp.int32),
-        p_x=jnp.zeros((n,), jnp.int32),
-        p_y=jnp.zeros((n,), jnp.int32),
-        fixed=jnp.zeros((n, n), jnp.bool_),
-        rounds=jnp.int32(0), pushes=jnp.int32(0), relabels=jnp.int32(0),
+        F=jnp.zeros(batch + (n, n), jnp.int32),
+        p_x=jnp.zeros(batch + (n,), jnp.int32),
+        p_y=jnp.zeros(batch + (n,), jnp.int32),
+        fixed=jnp.zeros(batch + (n, n), jnp.bool_),
+        rounds=jnp.zeros(batch, jnp.int32),
+        pushes=jnp.zeros(batch, jnp.int32),
+        relabels=jnp.zeros(batch, jnp.int32),
     )
 
     refine_kw = dict(method=method, max_rounds=max_rounds,
@@ -301,20 +370,30 @@ def solve_assignment(
                      use_arc_fixing=use_arc_fixing, backend=backend)
 
     # ε-scaling: eps <- C, then eps <- ceil(eps/alpha) down to 1 (Alg. 5.0).
+    # eps is per-instance; an instance whose schedule hit its eps=1 pass is
+    # carried at eps=0 (dead) and its state frozen while the rest scale down.
     def body(carry):
         eps, st = carry
-        eps = jnp.maximum(1, -(-eps // alpha))  # paper line: eps <- eps/alpha
-        st = _refine(c, eps, st, **refine_kw)
-        next_eps = jnp.where(eps == 1, 0, eps)  # exit after the eps=1 pass
+        live = eps >= 1
+        eps_run = jnp.maximum(1, -(-eps // alpha))  # eps <- eps/alpha
+        st = _freeze(live, _refine(c, eps_run, st, live=live, **refine_kw),
+                     st)
+        next_eps = jnp.where(live & (eps_run > 1), eps_run, 0)
         return next_eps, st
 
     def cond(carry):
-        return carry[0] >= 1
+        return jnp.any(carry[0] >= 1)
 
     _, st = jax.lax.while_loop(cond, body, (C, st))
 
-    col = jnp.argmax(st.F, axis=1)
-    weight = jnp.sum(jnp.take_along_axis(w_i, col[:, None], axis=1))
+    # Unmatched rows (all-zero F row — possible only when max_rounds was hit
+    # before a perfect matching) get the sentinel n, so callers can always
+    # detect them; matched rows get their argmax column as before.
+    matched = jnp.sum(st.F, axis=-1) > 0
+    col = jnp.where(matched, jnp.argmax(st.F, axis=-1), n)
+    weight = jnp.sum(jnp.where(matched, jnp.take_along_axis(
+        w_i, jnp.minimum(col, n - 1)[..., :, None], axis=-1)[..., 0], 0),
+        axis=-1)
     return AssignmentResult(
         col_of_row=col, weight=weight, p_x=st.p_x, p_y=st.p_y,
         rounds=st.rounds, pushes=st.pushes, relabels=st.relabels,

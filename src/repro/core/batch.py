@@ -1,0 +1,210 @@
+"""Batched multi-instance solver engine: pad-and-bucket front end.
+
+The paper's solvers are throughput devices — the CUDA implementations
+amortize kernel-launch cost over thousands of nodes; this module amortizes
+*dispatch* cost over many instances. ``solve_maxflow_batch`` /
+``solve_assignment_batch`` take ragged collections of problems, pad each to
+a bucket shape (zero-capacity padding for grids, a bonus-shifted block for
+cost matrices — both value-preserving, see the helpers), stack every bucket
+into one leading batch axis, and run ONE jitted dispatch per bucket
+(``maxflow_grid_batch`` / the batch-polymorphic ``solve_assignment``).
+
+Per-instance convergence inside a batch is handled by the solvers' liveness
+masks: a converged instance is frozen via selects while the rest keep
+iterating, so batched results bit-match a Python loop of single-instance
+solves of the same padded problems (asserted in tests/test_batch.py).
+
+Bucketing contract (``bucket=``):
+  * ``"max"``  — every instance pads to the global max shape: one dispatch.
+  * ``"pow2"`` — shapes round up to powers of two: a few dispatches, bounded
+    padding waste (< 4x area for grids, < 2x for matrices).
+  * ``"exact"``— no padding: one dispatch per distinct shape.
+Results are always returned in input order, cropped back to original sizes.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.assignment.cost_scaling import (AssignmentResult,
+                                               solve_assignment)
+from repro.core.maxflow.grid import (GridFlowResult, GridProblem,
+                                     maxflow_grid_batch)
+
+__all__ = [
+    "pad_grid_problem", "stack_grid_problems", "pad_cost_matrix",
+    "solve_maxflow_batch", "solve_assignment_batch",
+]
+
+
+def _pow2(x: int) -> int:
+    return 1 << max(0, int(x) - 1).bit_length() if x > 1 else 1
+
+
+def _bucket_shape(shape: tuple, mode: str, max_shape: tuple) -> tuple:
+    if mode == "max":
+        return max_shape
+    if mode == "pow2":
+        return tuple(_pow2(s) for s in shape)
+    if mode == "exact":
+        return shape
+    raise ValueError(f"unknown bucket mode: {mode!r}")
+
+
+# ---------------------------------------------------------------- max-flow
+
+def pad_grid_problem(problem: GridProblem, H: int, W: int) -> GridProblem:
+    """Zero-capacity pad a grid-cut instance to (H, W).
+
+    Padded nodes carry no terminal or neighbour capacity, so they hold no
+    excess and never push or relabel usefully — they are inert, and the
+    max-flow value (and the cut restricted to the original window) of the
+    padded instance equals the original's.
+    """
+    cap, cs, ct = problem
+    h, w = cs.shape[-2:]
+    assert H >= h and W >= w, (H, W, h, w)
+    pad2 = ((0, H - h), (0, W - w))
+    return GridProblem(
+        cap_nbr=jnp.pad(cap, ((0, 0),) + pad2),
+        cap_src=jnp.pad(cs, pad2),
+        cap_sink=jnp.pad(ct, pad2),
+    )
+
+
+def stack_grid_problems(problems: Sequence[GridProblem]) -> GridProblem:
+    """Stack same-shape instances into the (B, 4, H, W) batched layout."""
+    return GridProblem(
+        cap_nbr=jnp.stack([jnp.asarray(p.cap_nbr) for p in problems]),
+        cap_src=jnp.stack([jnp.asarray(p.cap_src) for p in problems]),
+        cap_sink=jnp.stack([jnp.asarray(p.cap_sink) for p in problems]),
+    )
+
+
+def solve_maxflow_batch(
+    problems: Iterable[GridProblem],
+    *,
+    bucket: str = "max",
+    backend: str = "xla",
+    **solver_kw,
+) -> list[GridFlowResult]:
+    """Solve many (possibly ragged) grid-cut instances in batched dispatches.
+
+    Instances are padded to their bucket shape, stacked, and solved by
+    ``maxflow_grid_batch`` — one jitted call per bucket. Returns one
+    ``GridFlowResult`` per instance in input order, with ``cut`` and state
+    planes cropped back to the instance's original (H, W).
+    """
+    problems = [GridProblem(*(jnp.asarray(a) for a in p)) for p in problems]
+    if not problems:
+        return []
+    shapes = [tuple(p.cap_src.shape) for p in problems]
+    max_shape = (max(s[0] for s in shapes), max(s[1] for s in shapes))
+
+    buckets: dict[tuple, list[int]] = {}
+    for i, s in enumerate(shapes):
+        buckets.setdefault(_bucket_shape(s, bucket, max_shape), []).append(i)
+
+    results: list[GridFlowResult | None] = [None] * len(problems)
+    for (H, W), idxs in buckets.items():
+        stacked = stack_grid_problems(
+            [pad_grid_problem(problems[i], H, W) for i in idxs])
+        res = maxflow_grid_batch(stacked, backend=backend, **solver_kw)
+        for b, i in enumerate(idxs):
+            h, w = shapes[i]
+            st = res.state
+            results[i] = GridFlowResult(
+                flow=res.flow[b],
+                cut=res.cut[b, :h, :w],
+                state=st._replace(
+                    e=st.e[b, :h, :w], h=st.h[b, :h, :w],
+                    cap=st.cap[b, :, :h, :w],
+                    cap_src=st.cap_src[b, :h, :w],
+                    cap_sink=st.cap_sink[b, :h, :w],
+                    sink_flow=st.sink_flow[b], src_flow=st.src_flow[b]),
+                rounds=res.rounds[b],
+                converged=res.converged[b],
+            )
+    return results  # type: ignore[return-value]
+
+
+# -------------------------------------------------------------- assignment
+
+def pad_cost_matrix(w, m: int):
+    """Pad an (n, n) integer weight matrix to (m, m), optimum-preserving.
+
+    The real block gets a uniform bonus ``1 - min(0, w.min())`` so every
+    real-real arc strictly beats the zero-weight dummy arcs: every optimal
+    perfect matching of the padded matrix matches real rows to real columns
+    (exchange argument — rerouting a real row from a dummy column to any
+    real column gains ``w + bonus >= 1``), and the real block's restriction
+    is exactly an optimal matching of the original. Padded weight =
+    original weight + n * bonus. Caller must keep
+    ``m * (m+1) * max|w + bonus|`` inside int32 (same contract as
+    ``solve_assignment``).
+
+    Returns ``(padded, bonus)``.
+    """
+    w = np.asarray(w)
+    n = w.shape[-1]
+    assert m >= n, (m, n)
+    assert np.issubdtype(w.dtype, np.integer), "integer weights only"
+    bonus = int(1 - min(0, int(w.min()))) if n else 1
+    out = np.zeros((m, m), np.int32)
+    out[:n, :n] = w + bonus
+    return jnp.asarray(out), bonus
+
+
+def solve_assignment_batch(
+    costs: Sequence,
+    *,
+    bucket: str = "max",
+    **solver_kw,
+) -> list[AssignmentResult]:
+    """Solve many (possibly ragged) assignment instances in batched dispatches.
+
+    ``costs`` is a sequence of square integer weight matrices. Same-bucket
+    instances are padded with ``pad_cost_matrix``, stacked to (B, m, m), and
+    solved by the batch-polymorphic ``solve_assignment`` in one dispatch per
+    bucket. Returns one ``AssignmentResult`` per instance in input order:
+    ``col_of_row`` is cropped to the original n (a permutation of range(n)
+    when ``converged`` — guaranteed by the bonus-shifted padding), ``weight``
+    is recomputed on the ORIGINAL weights, and prices keep the padded
+    solver's values (cropped). If an instance did NOT converge (hit
+    ``max_rounds``), rows may still point at dummy columns: their col values
+    stay >= n so callers can detect them, and they contribute 0 to
+    ``weight`` rather than a clamped arbitrary entry.
+    """
+    costs = [np.asarray(w) for w in costs]
+    if not costs:
+        return []
+    sizes = [w.shape[-1] for w in costs]
+    max_n = max(sizes)
+
+    buckets: dict[tuple, list[int]] = {}
+    for i, n in enumerate(sizes):
+        buckets.setdefault(
+            _bucket_shape((n,), bucket, (max_n,)), []).append(i)
+
+    results: list[AssignmentResult | None] = [None] * len(costs)
+    for (m,), idxs in buckets.items():
+        stacked = jnp.stack([pad_cost_matrix(costs[i], m)[0] for i in idxs])
+        res = solve_assignment(stacked, **solver_kw)
+        for b, i in enumerate(idxs):
+            n = sizes[i]
+            col = res.col_of_row[b, :n]
+            valid = col < n          # unconverged rows may hold dummy cols
+            picked = jnp.take_along_axis(
+                jnp.asarray(costs[i], jnp.int32),
+                jnp.minimum(col, n - 1)[:, None], axis=1)[:, 0]
+            weight = jnp.sum(jnp.where(valid, picked, 0))
+            results[i] = AssignmentResult(
+                col_of_row=col, weight=weight,
+                p_x=res.p_x[b, :n], p_y=res.p_y[b, :n],
+                rounds=res.rounds[b], pushes=res.pushes[b],
+                relabels=res.relabels[b], converged=res.converged[b],
+            )
+    return results  # type: ignore[return-value]

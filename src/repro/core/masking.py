@@ -1,0 +1,33 @@
+"""Per-instance liveness freeze — the one primitive behind batched solving.
+
+Both batched solvers (``maxflow.grid`` and ``assignment.cost_scaling``)
+replace scalar while-loop predicates with per-instance masks: each outer
+iteration computes a candidate next state for the whole batch, then
+``freeze`` selects the old state back in for instances whose mask is False.
+Keeping the broadcast logic in one place keeps the two solvers' freeze
+semantics identical — the bit-match contract of ``repro.core.batch`` rests
+on it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def freeze(live, new, old, lead_axes_fn=None):
+    """Select ``new`` where ``live`` else ``old``, per pytree leaf.
+
+    ``live`` has the batch shape (``()`` for a single instance, ``(B,)`` for
+    a batch); leaves carry the batch axes plus trailing data axes.
+    ``lead_axes_fn(leaf) -> int`` names how many leaf axes PRECEDE the batch
+    axes (e.g. the direction axis of the grid solver's ``cap``); default 0.
+    """
+    live = jnp.asarray(live)
+
+    def sel(a, b):
+        lead = lead_axes_fn(a) if lead_axes_fn else 0
+        m = live.reshape((1,) * lead + live.shape
+                         + (1,) * (a.ndim - live.ndim - lead))
+        return jnp.where(m, a, b)
+
+    return jax.tree.map(sel, new, old)

@@ -21,6 +21,14 @@ Grid layout: ``cap[d, i, j]`` is the residual capacity of the edge from node
 (i, j) toward its neighbour in direction d ∈ {UP, DOWN, LEFT, RIGHT}.
 ``cap_src``/``cap_sink`` are the residual capacities of the terminal edges
 (x → s) and (x → t).
+
+Batching: every helper here operates on the LAST two axes, so state arrays may
+carry leading batch dimensions — ``e``: ``(..., H, W)``, ``cap``:
+``(4, ..., H, W)`` (direction axis first so ``cap[d]`` stays a plain index).
+``maxflow_grid`` solves one instance; ``maxflow_grid_batch`` solves a stack of
+same-shape instances in ONE jitted dispatch, with per-instance convergence
+masks so converged instances become no-ops instead of blocking the batch
+(see ``repro.core.batch`` for the pad-and-bucket front end).
 """
 from __future__ import annotations
 
@@ -44,49 +52,66 @@ class GridProblem(NamedTuple):
 
 
 class GridFlowState(NamedTuple):
-    e: jax.Array          # (H, W) excess
-    h: jax.Array          # (H, W) heights, int32
-    cap: jax.Array        # (4, H, W) residual neighbour capacities
-    cap_src: jax.Array    # (H, W) residual x -> s (returns excess)
-    cap_sink: jax.Array   # (H, W) residual x -> t
-    sink_flow: jax.Array  # scalar: total flow delivered to the sink
-    src_flow: jax.Array   # scalar: total flow returned to the source
+    e: jax.Array          # (..., H, W) excess
+    h: jax.Array          # (..., H, W) heights, int32
+    cap: jax.Array        # (4, ..., H, W) residual neighbour capacities
+    cap_src: jax.Array    # (..., H, W) residual x -> s (returns excess)
+    cap_sink: jax.Array   # (..., H, W) residual x -> t
+    sink_flow: jax.Array  # (...,) total flow delivered to the sink
+    src_flow: jax.Array   # (...,) total flow returned to the source
 
 
 class GridFlowResult(NamedTuple):
-    flow: jax.Array        # max-flow value
-    cut: jax.Array         # (H, W) bool — True = sink side of the min cut
-    state: GridFlowState
-    rounds: jax.Array      # Jacobi rounds executed
-    converged: jax.Array   # bool
+    flow: jax.Array        # (...,) max-flow value(s)
+    cut: jax.Array         # (..., H, W) bool — True = sink side of the cut
+    state: GridFlowState   # NOTE: maxflow_grid_batch returns cap (B, 4, H, W)
+    rounds: jax.Array      # (...,) Jacobi rounds executed per instance
+    converged: jax.Array   # (...,) bool
 
 
 def _nbr_h(h: jax.Array, d: int) -> jax.Array:
-    """Height of the neighbour in direction d, INF outside the grid."""
+    """Height of the neighbour in direction d, INF outside the grid.
+
+    Operates on the last two (H, W) axes; leading batch axes pass through.
+    """
     big = INF_H
     if d == UP:
-        return jnp.concatenate([jnp.full_like(h[:1], big), h[:-1]], axis=0)
+        return jnp.concatenate(
+            [jnp.full_like(h[..., :1, :], big), h[..., :-1, :]], axis=-2)
     if d == DOWN:
-        return jnp.concatenate([h[1:], jnp.full_like(h[:1], big)], axis=0)
+        return jnp.concatenate(
+            [h[..., 1:, :], jnp.full_like(h[..., :1, :], big)], axis=-2)
     if d == LEFT:
-        return jnp.concatenate([jnp.full_like(h[:, :1], big), h[:, :-1]], axis=1)
-    return jnp.concatenate([h[:, 1:], jnp.full_like(h[:, :1], big)], axis=1)
+        return jnp.concatenate(
+            [jnp.full_like(h[..., :, :1], big), h[..., :, :-1]], axis=-1)
+    return jnp.concatenate(
+        [h[..., :, 1:], jnp.full_like(h[..., :, :1], big)], axis=-1)
 
 
 def _move(a: jax.Array, d: int) -> jax.Array:
     """Deposit a[x] at x's neighbour in direction d (zero fill at border)."""
     z = jnp.zeros_like
     if d == UP:
-        return jnp.concatenate([a[1:], z(a[:1])], axis=0)
+        return jnp.concatenate([a[..., 1:, :], z(a[..., :1, :])], axis=-2)
     if d == DOWN:
-        return jnp.concatenate([z(a[:1]), a[:-1]], axis=0)
+        return jnp.concatenate([z(a[..., :1, :]), a[..., :-1, :]], axis=-2)
     if d == LEFT:
-        return jnp.concatenate([a[:, 1:], z(a[:, :1])], axis=1)
-    return jnp.concatenate([z(a[:, :1]), a[:, :-1]], axis=1)
+        return jnp.concatenate([a[..., :, 1:], z(a[..., :, :1])], axis=-1)
+    return jnp.concatenate([z(a[..., :, :1]), a[..., :, :-1]], axis=-1)
+
+
+def _gsum(a: jax.Array) -> jax.Array:
+    """Per-instance grid sum: reduce the trailing (H, W) axes only."""
+    return jnp.sum(a, axis=(-2, -1))
 
 
 def jacobi_round(state: GridFlowState, n_nodes: jax.Array) -> GridFlowState:
-    """One synchronous push/relabel round over every node (Alg. 4.5, Jacobi)."""
+    """One synchronous push/relabel round over every node (Alg. 4.5, Jacobi).
+
+    Shape-polymorphic over leading batch axes: ``e`` may be ``(..., H, W)``
+    with ``cap`` ``(4, ..., H, W)``; a converged instance (no active node) is
+    an exact no-op, which is what makes the batched solver sound.
+    """
     e, h, cap, cap_src, cap_sink, sink_flow, src_flow = state
     active = e > 0
 
@@ -99,7 +124,7 @@ def jacobi_round(state: GridFlowState, n_nodes: jax.Array) -> GridFlowState:
          jnp.where(cap_src > 0, n_nodes, INF_H)]
         + [jnp.where(cap[d] > 0, _nbr_h(h, d), INF_H) for d in range(4)],
         axis=0,
-    )  # (6, H, W)
+    )  # (6, ..., H, W)
     h_min = jnp.min(cand, axis=0)
     choice = jnp.argmin(cand, axis=0)
 
@@ -131,8 +156,8 @@ def jacobi_round(state: GridFlowState, n_nodes: jax.Array) -> GridFlowState:
         cap=cap_new,
         cap_src=cap_src - d_src,
         cap_sink=cap_sink - d_sink,
-        sink_flow=sink_flow + jnp.sum(d_sink),
-        src_flow=src_flow + jnp.sum(d_src),
+        sink_flow=sink_flow + _gsum(d_sink),
+        src_flow=src_flow + _gsum(d_src),
     )
 
 
@@ -180,8 +205,8 @@ def jacobi_round_multipush(state: GridFlowState,
     return GridFlowState(
         e=e - out + inflow, h=h_new, cap=cap_new,
         cap_src=cap_src - d_src, cap_sink=cap_sink - d_sink,
-        sink_flow=sink_flow + jnp.sum(d_sink),
-        src_flow=src_flow + jnp.sum(d_src),
+        sink_flow=sink_flow + _gsum(d_sink),
+        src_flow=src_flow + _gsum(d_src),
     )
 
 
@@ -217,18 +242,116 @@ def bfs_heights(cap: jax.Array, cap_sink: jax.Array, h_prev: jax.Array,
 
 
 def check_no_violations(state: GridFlowState) -> jax.Array:
-    """True iff no residual edge (x,y) has h(x) > h(y)+1.
+    """True iff no residual edge (x,y) has h(x) > h(y)+1 (per instance).
 
     The paper's hybrid global relabel (Alg. 4.8 lines 1-6) cancels such
     violating edges, which arise under asynchronous interleaving. Our Jacobi
     schedule provably never creates them (DESIGN.md §2); this check is the
-    runtime witness (asserted in tests / hypothesis properties).
+    runtime witness (asserted in tests / hypothesis properties). Returns a
+    scalar for single instances, ``(B,)`` for batched states. Accepts both
+    public layouts: ``maxflow_grid`` states (``cap`` ``(4, H, W)``) and
+    ``maxflow_grid_batch`` results (``cap`` ``(B, 4, H, W)``).
     """
-    ok = jnp.bool_(True)
+    cap = state.cap
+    if state.h.ndim > 2:  # batched public layout -> internal (4, B, H, W)
+        cap = jnp.moveaxis(cap, -3, 0)
+    ok = jnp.ones(state.h.shape[:-2], jnp.bool_)
     for d in range(4):
-        viol = (state.cap[d] > 0) & (state.h > _nbr_h(state.h, d) + 1)
-        ok &= ~jnp.any(viol)
+        viol = (cap[d] > 0) & (state.h > _nbr_h(state.h, d) + 1)
+        ok &= ~jnp.any(viol, axis=(-2, -1))
     return ok
+
+
+def _round_fn(backend: str):
+    """Jacobi-round implementation for a backend flag (xla/multipush/pallas)."""
+    if backend == "pallas":  # the paper-optimized hot loop as a TPU kernel
+        from repro.kernels.grid_push.ops import jacobi_round_pallas
+        return jacobi_round_pallas
+    if backend == "multipush":  # beyond-paper: saturate all lower nbrs
+        return jacobi_round_multipush
+    return jacobi_round
+
+
+def _select_state(live: jax.Array, new: GridFlowState,
+                  old: GridFlowState) -> GridFlowState:
+    """Per-instance freeze: keep ``old`` leaves where ``live`` is False.
+
+    ``live`` has the batch shape (``()`` or ``(B,)``); leaves are
+    ``(..., H, W)`` planes, ``(4, ..., H, W)`` for ``cap`` (direction axis
+    leads the batch axes), or ``(...,)`` flow totals.
+    """
+    from repro.core.masking import freeze
+    # the only leaf with an axis before the batch axes is cap (4, ..., H, W)
+    return freeze(live, new, old,
+                  lead_axes_fn=lambda a: 1 if a.ndim - live.ndim == 3 else 0)
+
+
+def _solve_grid(cap0, cs0, ct0, *, rounds_per_heuristic, max_rounds,
+                bfs_max_iters, backend) -> GridFlowResult:
+    """Shared solver loop, rank-polymorphic over leading batch axes.
+
+    ``cs0``/``ct0`` are ``(..., H, W)`` with ``cap0`` ``(4, ..., H, W)``.
+    The loop predicate is a per-instance liveness mask (batch shape ``(...,)``,
+    scalar for a single instance): every outer iteration advances only the
+    instances that still hold excess and are under ``max_rounds``; the rest
+    are frozen via selects. With no batch axes the mask is the scalar
+    predicate of the original single-instance loop (the select is the
+    identity while it runs), so both entry points share one trajectory.
+    """
+    *b, H, W = cs0.shape
+    bshape = tuple(b)
+    n_nodes = jnp.int32(H * W + 2)
+    bfs_iters = bfs_max_iters or (H * W + 2)
+
+    # Paper Alg. 4.7 init: saturate s->x, heights 0, excess = u(s, x).
+    state = GridFlowState(
+        e=cs0.astype(jnp.float32),
+        h=jnp.zeros(bshape + (H, W), jnp.int32),
+        cap=cap0.astype(jnp.float32),
+        cap_src=cs0.astype(jnp.float32),   # residual x -> s after saturation
+        cap_sink=ct0.astype(jnp.float32),
+        sink_flow=jnp.zeros(bshape, jnp.float32),
+        src_flow=jnp.zeros(bshape, jnp.float32),
+    )
+    # Start from BFS-consistent heights (global relabel at round 0).
+    state = state._replace(
+        h=bfs_heights(state.cap, state.cap_sink, state.h, n_nodes, bfs_iters))
+
+    round_fn = _round_fn(backend)
+
+    def live_of(state, rounds):
+        return jnp.any(state.e > 0, axis=(-2, -1)) & (rounds < max_rounds)
+
+    def outer_cond(carry):
+        state, rounds = carry
+        return jnp.any(live_of(state, rounds))
+
+    def outer_body(carry):
+        state, rounds = carry
+        live = live_of(state, rounds)
+
+        def inner(_, s):
+            return round_fn(s, n_nodes)
+
+        new = jax.lax.fori_loop(0, rounds_per_heuristic, inner, state)
+        new = new._replace(
+            h=bfs_heights(new.cap, new.cap_sink, new.h, n_nodes, bfs_iters))
+        state = _select_state(live, new, state)
+        return state, rounds + jnp.where(live, rounds_per_heuristic, 0)
+
+    state, rounds = jax.lax.while_loop(
+        outer_cond, outer_body, (state, jnp.zeros(bshape, jnp.int32)))
+
+    # Min cut: sink side = nodes that still reach t in the residual graph.
+    h_bfs = bfs_heights(state.cap, state.cap_sink, state.h, n_nodes, bfs_iters)
+    cut = h_bfs < n_nodes
+    return GridFlowResult(
+        flow=state.sink_flow,
+        cut=cut,
+        state=state,
+        rounds=rounds,
+        converged=~jnp.any(state.e > 0, axis=(-2, -1)),
+    )
 
 
 @functools.partial(
@@ -251,57 +374,54 @@ def maxflow_grid(
     fixpoint, not a host round-trip).
     """
     cap0, cs0, ct0 = problem
-    H, W = cs0.shape
-    n_nodes = jnp.int32(H * W + 2)
-    bfs_iters = bfs_max_iters or (H * W + 2)
+    if cs0.ndim != 2 or cap0.ndim != 3:
+        # A (B, 4, H, W) stack with B == 4 would silently alias the batch
+        # axis onto the direction axis — reject batches loudly instead.
+        raise ValueError(
+            f"maxflow_grid solves ONE instance (cap_nbr (4, H, W), got "
+            f"{cap0.shape}); use maxflow_grid_batch for stacked problems")
+    return _solve_grid(cap0, cs0, ct0,
+                       rounds_per_heuristic=rounds_per_heuristic,
+                       max_rounds=max_rounds, bfs_max_iters=bfs_max_iters,
+                       backend=backend)
 
-    # Paper Alg. 4.7 init: saturate s->x, heights 0, excess = u(s, x).
-    state = GridFlowState(
-        e=cs0.astype(jnp.float32),
-        h=jnp.zeros((H, W), jnp.int32),
-        cap=cap0.astype(jnp.float32),
-        cap_src=cs0.astype(jnp.float32),   # residual x -> s after saturation
-        cap_sink=ct0.astype(jnp.float32),
-        sink_flow=jnp.float32(0),
-        src_flow=jnp.float32(0),
-    )
-    # Start from BFS-consistent heights (global relabel at round 0).
-    state = state._replace(
-        h=bfs_heights(state.cap, state.cap_sink, state.h, n_nodes, bfs_iters))
 
-    def outer_cond(carry):
-        state, rounds = carry
-        return jnp.any(state.e > 0) & (rounds < max_rounds)
+@functools.partial(
+    jax.jit,
+    static_argnames=("rounds_per_heuristic", "max_rounds", "bfs_max_iters",
+                     "backend"),
+)
+def maxflow_grid_batch(
+    problem: GridProblem,
+    *,
+    rounds_per_heuristic: int = 32,
+    max_rounds: int = 100_000,
+    bfs_max_iters: int = 0,
+    backend: str = "xla",
+) -> GridFlowResult:
+    """Max-flow on a BATCH of same-shape grid instances in one dispatch.
 
-    if backend == "pallas":  # the paper-optimized hot loop as a TPU kernel
-        from repro.kernels.grid_push.ops import jacobi_round_pallas
-        round_fn = jacobi_round_pallas
-    elif backend == "multipush":  # beyond-paper: saturate all lower nbrs
-        round_fn = jacobi_round_multipush
-    else:
-        round_fn = jacobi_round
+    ``problem`` arrays carry a leading batch axis: ``cap_nbr`` is
+    ``(B, 4, H, W)`` (a plain stack of single-instance problems),
+    ``cap_src``/``cap_sink`` are ``(B, H, W)``. Returns a ``GridFlowResult``
+    whose leaves are batched the same way (``flow``/``rounds``/``converged``
+    are ``(B,)``; ``state.cap`` is returned as ``(B, 4, H, W)``).
 
-    def outer_body(carry):
-        state, rounds = carry
-
-        def inner(_, s):
-            return round_fn(s, n_nodes)
-
-        state = jax.lax.fori_loop(0, rounds_per_heuristic, inner, state)
-        state = state._replace(
-            h=bfs_heights(state.cap, state.cap_sink, state.h, n_nodes, bfs_iters))
-        return state, rounds + rounds_per_heuristic
-
-    state, rounds = jax.lax.while_loop(
-        outer_cond, outer_body, (state, jnp.int32(0)))
-
-    # Min cut: sink side = nodes that still reach t in the residual graph.
-    h_bfs = bfs_heights(state.cap, state.cap_sink, state.h, n_nodes, bfs_iters)
-    cut = h_bfs < n_nodes
-    return GridFlowResult(
-        flow=state.sink_flow,
-        cut=cut,
-        state=state,
-        rounds=rounds,
-        converged=~jnp.any(state.e > 0),
-    )
+    Runs the SAME shared loop as ``maxflow_grid`` with batch shape ``(B,)``:
+    per-instance liveness masks freeze converged instances, so results
+    bit-match a solo ``maxflow_grid`` run of each (padded) instance. Ragged
+    batches are handled upstream by ``repro.core.batch`` (zero-capacity
+    padding leaves padded nodes inert and the flow value unchanged).
+    """
+    cap0, cs0, ct0 = problem
+    if cap0.ndim != 4 or cap0.shape[1] != 4 or cs0.ndim != 3:
+        raise ValueError(
+            f"maxflow_grid_batch expects cap_nbr (B, 4, H, W), got "
+            f"{cap0.shape}; use maxflow_grid for a single instance")
+    res = _solve_grid(jnp.moveaxis(cap0, 1, 0), cs0, ct0,
+                      rounds_per_heuristic=rounds_per_heuristic,
+                      max_rounds=max_rounds, bfs_max_iters=bfs_max_iters,
+                      backend=backend)
+    # public layout: batch axis leads everywhere, including state.cap
+    return res._replace(
+        state=res.state._replace(cap=jnp.moveaxis(res.state.cap, 0, 1)))

@@ -15,6 +15,12 @@ three routers:
     ``solve_assignment`` (small shapes / tests / the paper-faithful oracle).
 
 ``auction_route`` is what MoE configs select with ``router = "flow"``.
+
+All routers are shape-polymorphic over leading batch axes: ``scores`` may be
+``(T, E)`` or ``(..., T, E)`` (e.g. ``(G, T, E)`` for all of a layer's token
+groups, or ``(L, G, T, E)`` for several layers), and every group's assignment
+problem is solved in ONE jitted dispatch instead of a vmap/loop of dispatches
+— the batched-solver engine of ``repro.core.batch`` applied to MoE routing.
 """
 from __future__ import annotations
 
@@ -29,10 +35,10 @@ NEG = -1e9
 
 
 class Routing(NamedTuple):
-    dispatch: jax.Array   # (T, E) bool — token t goes to expert e
-    combine: jax.Array    # (T, E) float — combine weights (0 where not routed)
-    prices: jax.Array     # (E,) final expert prices (auction only; else 0)
-    demand: jax.Array     # (E,) tokens per expert (for load-balance metrics)
+    dispatch: jax.Array   # (..., T, E) bool — token t goes to expert e
+    combine: jax.Array    # (..., T, E) float — combine weights (0 if dropped)
+    prices: jax.Array     # (..., E) final expert prices (auction only; else 0)
+    demand: jax.Array     # (..., E) tokens per expert (load-balance metrics)
 
 
 def _keep_topc_per_expert(score: jax.Array, picked: jax.Array,
@@ -40,21 +46,22 @@ def _keep_topc_per_expert(score: jax.Array, picked: jax.Array,
     """Per-expert capacity enforcement: keep the `capacity` best bidders."""
     bid = jnp.where(picked, score, NEG)
     # rank of each token within its expert column, best first
-    order = jnp.argsort(-bid, axis=0)
-    ranks = jnp.argsort(order, axis=0)
+    order = jnp.argsort(-bid, axis=-2)
+    ranks = jnp.argsort(order, axis=-2)
     return picked & (ranks < capacity) & (bid > NEG / 2)
 
 
 def topk_route(scores: jax.Array, k: int, capacity: int) -> Routing:
     """Baseline: per-token top-k, then per-expert capacity truncation."""
-    T, E = scores.shape
-    _, idx = jax.lax.top_k(scores, k)
-    picked = jnp.zeros((T, E), bool).at[jnp.arange(T)[:, None], idx].set(True)
+    E = scores.shape[-1]
+    _, idx = jax.lax.top_k(scores, k)                  # (..., T, k)
+    picked = jnp.any(jax.nn.one_hot(idx, E, dtype=bool), axis=-2)
     kept = _keep_topc_per_expert(scores, picked, capacity)
     gates = jax.nn.softmax(jnp.where(picked, scores, NEG), axis=-1)
     combine = jnp.where(kept, gates, 0.0)
-    return Routing(kept, combine, jnp.zeros((E,), scores.dtype),
-                   jnp.sum(kept, axis=0))
+    return Routing(kept, combine,
+                   jnp.zeros(scores.shape[:-2] + (E,), scores.dtype),
+                   jnp.sum(kept, axis=-2))
 
 
 def auction_route(scores: jax.Array, k: int, capacity: int,
@@ -66,33 +73,36 @@ def auction_route(scores: jax.Array, k: int, capacity: int,
     marginal (capacity-th) bid plus ε, shedding the weakest bidders — the
     dense-bipartite analogue of Algorithm 5.4's relabel. Fixed ``n_iters``
     keeps the op static for pjit; the final truncation guarantees feasibility
-    regardless of convergence state.
+    regardless of convergence state. Leading batch axes route every group in
+    one dispatch (prices are per group).
     """
-    T, E = scores.shape
+    T, E = scores.shape[-2:]
     s = scores.astype(jnp.float32)
 
     def body(_, q):
-        adj = s - q[None, :]
-        kth = jax.lax.top_k(adj, k)[0][:, -1:]
+        adj = s - q[..., None, :]
+        kth = jax.lax.top_k(adj, k)[0][..., -1:]
         picked = adj >= kth
         bids = jnp.where(picked, adj, NEG)
-        top_c1 = jax.lax.top_k(bids.T, capacity + 1)[0]    # (E, C+1)
-        demand = jnp.sum(picked, axis=0)
+        top_c1 = jax.lax.top_k(jnp.swapaxes(bids, -1, -2),
+                               capacity + 1)[0]            # (..., E, C+1)
+        demand = jnp.sum(picked, axis=-2)
         over = demand > capacity
         # relabel: raise the price by the gap between the capacity-th and
         # (capacity+1)-th bids + eps — exactly sheds bidders below the cut
         # (the marginal bid plays the role of Alg. 5.4's min c'_p).
-        inc = jnp.maximum(top_c1[:, capacity - 1] - top_c1[:, capacity],
+        inc = jnp.maximum(top_c1[..., capacity - 1] - top_c1[..., capacity],
                           0.0) + eps
         return jnp.where(over, q + inc, q)
 
+    q0 = jnp.zeros(s.shape[:-2] + (E,), jnp.float32)
     if capacity < T:  # capacity >= T can never oversubscribe: prices stay 0
-        q = jax.lax.fori_loop(0, n_iters, body, jnp.zeros((E,), jnp.float32))
+        q = jax.lax.fori_loop(0, n_iters, body, q0)
     else:
-        q = jnp.zeros((E,), jnp.float32)
+        q = q0
 
-    adj = s - q[None, :]
-    kth = jax.lax.top_k(adj, k)[0][:, -1:]
+    adj = s - q[..., None, :]
+    kth = jax.lax.top_k(adj, k)[0][..., -1:]
     picked = adj >= kth
     kept = _keep_topc_per_expert(adj, picked, capacity)
 
@@ -100,19 +110,20 @@ def auction_route(scores: jax.Array, k: int, capacity: int,
     # (the Jacobi analogue of continuing refine until no active node remains —
     # bounded to 2 passes to keep the op static).
     for _ in range(2):
-        slots_used = jnp.sum(kept, axis=1, keepdims=True)          # (T, 1)
-        free = (capacity - jnp.sum(kept, axis=0))[None, :]         # (1, E)
+        slots_used = jnp.sum(kept, axis=-1, keepdims=True)       # (..., T, 1)
+        free = (capacity - jnp.sum(kept, axis=-2))[..., None, :]  # (..., 1, E)
         want = jnp.where(kept | (free <= 0) | (slots_used >= k), NEG, adj)
-        best = jnp.argmax(want, axis=1)
-        valid = jnp.take_along_axis(want, best[:, None], 1)[:, 0] > NEG / 2
-        extra = jax.nn.one_hot(best, E, dtype=bool) & valid[:, None]
+        best = jnp.argmax(want, axis=-1)
+        valid = jnp.take_along_axis(want, best[..., None],
+                                    -1)[..., 0] > NEG / 2
+        extra = jax.nn.one_hot(best, E, dtype=bool) & valid[..., None]
         # re-enforce capacity with incumbents ranked strictly above rescuers
         rank_score = jnp.where(kept, 1e6 + adj, adj)
         kept = _keep_topc_per_expert(rank_score, kept | extra, capacity)
 
     gates = jax.nn.softmax(jnp.where(kept | picked, s, NEG), axis=-1)
     combine = jnp.where(kept, gates, 0.0).astype(scores.dtype)
-    return Routing(kept, combine, q, jnp.sum(kept, axis=0))
+    return Routing(kept, combine, q, jnp.sum(kept, axis=-2))
 
 
 def exact_route(scores: jax.Array, capacity: int,
@@ -122,20 +133,27 @@ def exact_route(scores: jax.Array, capacity: int,
     Requires T == E * capacity (pad tokens to make it so). Every expert is
     replicated into ``capacity`` slots and the T×T assignment is solved with
     the cost-scaling algorithm — the BASE-layers formulation, i.e. the
-    paper's solver used verbatim inside the model stack.
+    paper's solver used verbatim inside the model stack. Leading batch axes
+    solve every group's assignment in one batched dispatch.
+
+    If the solve does not converge (only possible with a pathologically low
+    ``max_rounds``; the default always converges), unmatched rows carry the
+    solver's >= T sentinel, which maps to an all-False dispatch row — those
+    tokens are DROPPED, observable as ``dispatch.sum() < T``, rather than
+    silently routed to an arbitrary expert.
     """
-    T, E = scores.shape
+    T, E = scores.shape[-2:]
     assert T == E * capacity, "exact_route needs T == E * capacity"
-    w = jnp.repeat(scores, capacity, axis=1)              # (T, E*capacity)
+    w = jnp.repeat(scores, capacity, axis=-1)             # (..., T, E*cap)
     w_i = jnp.round(w * weight_scale).astype(jnp.int32)
     res = solve_assignment(w_i, method="auction")
     expert = res.col_of_row // capacity                   # slot -> expert
     dispatch = jax.nn.one_hot(expert, E, dtype=bool)
     gates = jax.nn.softmax(jnp.where(dispatch, scores, NEG), axis=-1)
     combine = jnp.where(dispatch, gates, 0.0)
-    return Routing(dispatch, combine,
-                   -res.p_y.reshape(E, capacity).mean(-1).astype(scores.dtype),
-                   jnp.sum(dispatch, axis=0))
+    prices = -res.p_y.reshape(res.p_y.shape[:-1] + (E, capacity)).mean(-1)
+    return Routing(dispatch, combine, prices.astype(scores.dtype),
+                   jnp.sum(dispatch, axis=-2))
 
 
 def solve_transportation(w: jax.Array, supply, capacity,
@@ -168,5 +186,6 @@ def solve_transportation(w: jax.Array, supply, capacity,
     res = solve_assignment(big, method="auction")
     flow = np.zeros((n_x, n_y), np.int32)
     col_of_row = np.asarray(res.col_of_row[:len(rows)])
-    np.add.at(flow, (rows, cols[col_of_row]), 1)
+    ok = col_of_row < len(cols)  # unmatched sentinel when not converged
+    np.add.at(flow, (rows[ok], cols[col_of_row[ok]]), 1)
     return jnp.asarray(flow), res

@@ -29,12 +29,15 @@ INF_H = 2 ** 30  # python int: jnp scalars would be captured consts in pallas
 
 def _grid_push_kernel(nnodes_ref, e_ref, h_ref, cap_ref, nbrh_ref, csrc_ref,
                       csink_ref, hnew_ref, delta_ref):
-    e = e_ref[...]                  # (BH, BW) f32
-    h = h_ref[...]                  # (BH, BW) i32
-    cap = cap_ref[...]              # (4, BH, BW) f32 residual neighbour caps
-    nbr_h = nbrh_ref[...]           # (4, BH, BW) i32 neighbour heights (halo)
-    cap_src = csrc_ref[...]         # (BH, BW) f32
-    cap_sink = csink_ref[...]       # (BH, BW) f32
+    # Blocks are (BH, BW) planes; in batched mode each carries a leading
+    # singleton batch axis (one grid step per instance) that we squeeze here.
+    bh, bw = e_ref.shape[-2:]
+    e = e_ref[...].reshape(bh, bw)            # f32
+    h = h_ref[...].reshape(bh, bw)            # i32
+    cap = cap_ref[...].reshape(4, bh, bw)     # f32 residual neighbour caps
+    nbr_h = nbrh_ref[...].reshape(4, bh, bw)  # i32 neighbour heights (halo)
+    cap_src = csrc_ref[...].reshape(bh, bw)   # f32
+    cap_sink = csink_ref[...].reshape(bh, bw)  # f32
     n_nodes = nnodes_ref[0]
 
     active = e > 0
@@ -57,8 +60,9 @@ def _grid_push_kernel(nnodes_ref, e_ref, h_ref, cap_ref, nbrh_ref, csrc_ref,
     delta = jnp.where(do_push, jnp.minimum(e, chosen_cap), 0.0)
 
     planes = jax.lax.broadcasted_iota(jnp.int32, cand.shape, 0)
-    hnew_ref[...] = jnp.where(do_relabel, h_min + 1, h)
-    delta_ref[...] = jnp.where(planes == choice[None], delta[None], 0.0)
+    hnew_ref[...] = jnp.where(do_relabel, h_min + 1, h).reshape(hnew_ref.shape)
+    delta_ref[...] = jnp.where(planes == choice[None], delta[None],
+                               0.0).reshape(delta_ref.shape)
 
 
 @functools.partial(jax.jit, static_argnames=("block_h", "block_w",
@@ -70,28 +74,43 @@ def grid_push_decide(e, h, cap, nbr_h, cap_src, cap_sink, n_nodes,
 
     Returns (h_new, delta) where delta[p] is the flow pushed toward plane
     p ∈ [sink, source, UP, DOWN, LEFT, RIGHT].
+
+    Accepts a leading batch axis: ``e`` may be ``(H, W)`` or ``(B, H, W)``
+    (with ``cap``/``nbr_h`` ``(4, B, H, W)``). In batched mode the pallas
+    grid gains a leading batch dimension — grid ``(B, H//bh, W//bw)`` — so
+    every instance's tiles are independent kernel steps of ONE launch,
+    amortizing the dispatch over the whole batch.
     """
-    H, W = e.shape
+    *batch, H, W = e.shape
     bh, bw = min(block_h, H), min(block_w, W)
     assert H % bh == 0 and W % bw == 0, (H, W, bh, bw)
-    grid = (H // bh, W // bw)
+    args = (jnp.asarray([n_nodes], jnp.int32), e, h, cap, nbr_h, cap_src,
+            cap_sink)
 
-    spec2d = pl.BlockSpec((bh, bw), lambda i, j: (i, j))
-    spec4 = pl.BlockSpec((4, bh, bw), lambda i, j: (0, i, j))
-    spec6 = pl.BlockSpec((6, bh, bw), lambda i, j: (0, i, j))
+    if not batch:
+        grid = (H // bh, W // bw)
+        spec2d = pl.BlockSpec((bh, bw), lambda i, j: (i, j))
+        spec4 = pl.BlockSpec((4, bh, bw), lambda i, j: (0, i, j))
+        spec6 = pl.BlockSpec((6, bh, bw), lambda i, j: (0, i, j))
+        nnodes_spec = pl.BlockSpec((1,), lambda i, j: (0,))
+        out_shape = [jax.ShapeDtypeStruct((H, W), jnp.int32),
+                     jax.ShapeDtypeStruct((6, H, W), jnp.float32)]
+    else:
+        (B,) = batch
+        grid = (B, H // bh, W // bw)
+        spec2d = pl.BlockSpec((1, bh, bw), lambda b, i, j: (b, i, j))
+        spec4 = pl.BlockSpec((4, 1, bh, bw), lambda b, i, j: (0, b, i, j))
+        spec6 = pl.BlockSpec((6, 1, bh, bw), lambda b, i, j: (0, b, i, j))
+        nnodes_spec = pl.BlockSpec((1,), lambda b, i, j: (0,))
+        out_shape = [jax.ShapeDtypeStruct((B, H, W), jnp.int32),
+                     jax.ShapeDtypeStruct((6, B, H, W), jnp.float32)]
 
     h_new, delta = pl.pallas_call(
         _grid_push_kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1,), lambda i, j: (0,)),  # n_nodes scalar
-            spec2d, spec2d, spec4, spec4, spec2d, spec2d,
-        ],
+        in_specs=[nnodes_spec, spec2d, spec2d, spec4, spec4, spec2d, spec2d],
         out_specs=[spec2d, spec6],
-        out_shape=[
-            jax.ShapeDtypeStruct((H, W), jnp.int32),
-            jax.ShapeDtypeStruct((6, H, W), jnp.float32),
-        ],
+        out_shape=out_shape,
         interpret=interpret,
-    )(jnp.asarray([n_nodes], jnp.int32), e, h, cap, nbr_h, cap_src, cap_sink)
+    )(*args)
     return h_new, delta

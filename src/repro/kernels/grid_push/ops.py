@@ -2,14 +2,17 @@
 
 Produces bit-identical state transitions to ``repro.core.maxflow.grid.
 jacobi_round`` (asserted in tests); the wrapper adds the halo gather before
-the kernel and the shift-add flow deposition after it.
+the kernel and the shift-add flow deposition after it. Like the XLA round it
+is shape-polymorphic over a leading batch axis (``e``: ``(..., H, W)``,
+``cap``: ``(4, ..., H, W)``) — the kernel grid then gains a batch dimension.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.maxflow.grid import (GridFlowState, _OPP, _move, _nbr_h)
+from repro.core.maxflow.grid import (GridFlowState, _OPP, _gsum, _move,
+                                     _nbr_h)
 from repro.kernels.grid_push.kernel import grid_push_decide
 from repro.kernels.grid_push.ref import grid_push_decide_ref
 
@@ -36,6 +39,6 @@ def jacobi_round_pallas(state: GridFlowState, n_nodes,
     return GridFlowState(
         e=e - out + inflow, h=h_new, cap=cap_new,
         cap_src=cap_src - d_src, cap_sink=cap_sink - d_sink,
-        sink_flow=sink_flow + jnp.sum(d_sink),
-        src_flow=src_flow + jnp.sum(d_src),
+        sink_flow=sink_flow + _gsum(d_sink),
+        src_flow=src_flow + _gsum(d_src),
     )

@@ -22,7 +22,8 @@ from repro.configs.base import get_config, list_configs      # noqa: E402
 from repro.launch.mesh import make_production_mesh           # noqa: E402
 from repro.launch.specs import (SHAPES, build_cell,          # noqa: E402
                                 cell_skip_reason)
-from repro.roofline import Roofline, model_flops_for        # noqa: E402
+from repro.roofline import (Roofline, cost_analysis_dict,    # noqa: E402
+                            model_flops_for)
 from repro.roofline_hlo import analyze as analyze_hlo        # noqa: E402
 
 LM_ARCHS = [a for a in [
@@ -62,7 +63,7 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
             lowered = jitted.lower(*cell.args)
             compiled = lowered.compile()
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis() or {}
+        cost = cost_analysis_dict(compiled)  # list-vs-dict across jax versions
         hlo = compiled.as_text()
         acc = analyze_hlo(hlo)           # trip-count-exact (per device)
         coll = acc["collectives"]

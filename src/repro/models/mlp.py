@@ -73,23 +73,19 @@ def _expert_ffn(buf, p, cfg):
     return jnp.einsum("ecf,efd->ecd", h, p["w2"][0])
 
 
-def _dispatch_group(xt, logits, combine_logits, p, cfg, *, k, capacity,
-                    decode):
+def _dispatch_group(xt, disp, combine_logits, p, cfg, *, k, capacity):
     """Dispatch + expert FFN + combine for ONE token group (vmapped).
 
-    Everything here (routing, argsort, capacity slots, scatter/gather) is
-    local to the group = local to one data shard after vmap, so none of it
-    generates cross-device traffic (DESIGN.md §5; the global-sort variant
-    cost 55 TB/device of all-reduce on deepseek train_4k).
+    Routing decisions arrive precomputed (``disp``): the router itself is
+    batch-polymorphic and runs ONCE over all groups before the vmap, so all
+    groups' assignment problems are solved in a single dispatch. Everything
+    here (argsort, capacity slots, scatter/gather) is local to the group =
+    local to one data shard after vmap, so none of it generates cross-device
+    traffic (DESIGN.md §5; the global-sort variant cost 55 TB/device of
+    all-reduce on deepseek train_4k).
     """
-    e = cfg.moe
     T, D = xt.shape
-    E = e.n_experts
-    if e.router == "flow" and not decode:
-        routing = auction_route(logits, k, capacity, n_iters=e.router_iters)
-    else:
-        routing = topk_route(logits, k, capacity)
-    disp = routing.dispatch                            # (T, E) bool
+    E = cfg.moe.n_experts
     gates = jax.nn.softmax(jnp.where(disp, combine_logits, -1e9), axis=-1)
     combine = jnp.where(disp, gates, 0.0).astype(xt.dtype)
 
@@ -146,9 +142,16 @@ def moe_apply(p, x, cfg, shd: Sharder, decode: bool = False):
     # cannot transpose inside scan).
     logits_sg = jax.lax.stop_gradient(logits)
 
+    # All groups' routing problems in ONE batched dispatch (the routers are
+    # batch-polymorphic over the leading group axis).
+    if e.router == "flow" and not decode:
+        routing = auction_route(logits_sg, k, capacity, n_iters=e.router_iters)
+    else:
+        routing = topk_route(logits_sg, k, capacity)
+
     group_fn = functools.partial(_dispatch_group, p=p, cfg=cfg, k=k,
-                                 capacity=capacity, decode=decode)
-    out = jax.vmap(group_fn)(xt, logits_sg, logits)    # (G, Tg, D)
+                                 capacity=capacity)
+    out = jax.vmap(group_fn)(xt, routing.dispatch, logits)    # (G, Tg, D)
     out = shd.constrain(out, "batch", None, None)
 
     if e.n_shared:

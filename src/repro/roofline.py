@@ -18,6 +18,35 @@ from __future__ import annotations
 import dataclasses
 import re
 
+
+def cost_analysis_dict(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across JAX versions to a dict.
+
+    Older jaxlibs return a single dict; newer ones return a LIST of
+    per-program dicts (and ``None`` is possible when analysis is
+    unavailable). Accepts either the compiled executable or the raw
+    ``cost_analysis()`` return value. A single-entry list unwraps to that
+    entry; multi-entry lists merge by summing numeric values (keeping the
+    first occurrence of non-numeric ones).
+    """
+    ca = compiled.cost_analysis() if hasattr(compiled, "cost_analysis") \
+        else compiled
+    if ca is None:
+        return {}
+    if isinstance(ca, dict):
+        return dict(ca)
+    entries = [e for e in ca if isinstance(e, dict)]
+    if len(entries) == 1:
+        return dict(entries[0])
+    out: dict = {}
+    for entry in entries:
+        for k, v in entry.items():
+            if isinstance(v, (int, float)) and not isinstance(v, bool):
+                out[k] = out.get(k, 0.0) + float(v)
+            else:
+                out.setdefault(k, v)
+    return out
+
 PEAK_FLOPS = 197e12          # bf16 per chip, TPU v5e
 HBM_BW = 819e9               # bytes/s per chip
 ICI_BW = 50e9                # bytes/s per link

@@ -1,0 +1,45 @@
+"""Optional-``hypothesis`` shim so the suite collects offline.
+
+Property-based tests import ``given``/``settings``/``st`` from here instead
+of from ``hypothesis`` directly. When hypothesis is installed the real
+objects pass through untouched; when it is not (offline/minimal
+environments), ``@given`` turns the test into a single skip and the rest of
+the module's tests still collect and run.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # degrade property tests to skips, keep the module alive
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # NOT functools.wraps: pytest must see a zero-arg signature,
+            # not the strategy-driven parameters of the wrapped property.
+            def wrapper():
+                pytest.skip("hypothesis not installed")
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _Strategy:
+        """Chainable stub so idioms like st.integers(0, 5).map(str) still
+        evaluate at decoration time (the strategies are never drawn from)."""
+
+        def __call__(self, *a, **k):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _Strategy()
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # optional-hypothesis shim
 
 from repro.core.assignment.cost_scaling import solve_assignment
 from repro.core.assignment.ref import (eps_optimal, optimal_weight,

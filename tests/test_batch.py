@@ -1,0 +1,192 @@
+"""Batched multi-instance solver engine: bit-match vs looped single solves.
+
+The contract under test (repro.core.batch + the batch-polymorphic solvers):
+a batched dispatch is EXACTLY a stack of single-instance solves — same flow
+values, same cuts, same matchings, same prices, and same per-instance
+round/push/relabel counters — because converged instances are frozen by
+liveness masks, not blocked on the rest of the batch. All capacities/weights
+are integers, so float sums are exact and equality is bitwise.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.assignment.cost_scaling import solve_assignment
+from repro.core.assignment.ref import optimal_weight
+from repro.core.batch import (pad_cost_matrix, pad_grid_problem,
+                              solve_assignment_batch, solve_maxflow_batch,
+                              stack_grid_problems)
+from repro.core.maxflow.grid import (GridProblem, check_no_violations,
+                                     maxflow_grid, maxflow_grid_batch)
+from repro.core.maxflow.ref import maxflow_grid_ref, random_grid_problem
+from repro.core.routing import auction_route, topk_route
+
+
+def _grid_problems(seed, B, H, W):
+    rng = np.random.default_rng(seed)
+    return [GridProblem(*map(jnp.asarray, random_grid_problem(rng, H, W)))
+            for _ in range(B)]
+
+
+@pytest.mark.parametrize("backend", ["xla", "multipush", "pallas"])
+def test_maxflow_batch_bitmatches_loop(backend):
+    probs = _grid_problems(0, 5, 8, 8)
+    batch = stack_grid_problems(probs)
+    rb = maxflow_grid_batch(batch, backend=backend)
+    for b, p in enumerate(probs):
+        rs = maxflow_grid(p, backend=backend)
+        assert float(rb.flow[b]) == float(rs.flow)
+        assert int(rb.rounds[b]) == int(rs.rounds)
+        assert bool(rb.converged[b]) == bool(rs.converged)
+        np.testing.assert_array_equal(np.asarray(rb.cut[b]),
+                                      np.asarray(rs.cut))
+        np.testing.assert_array_equal(np.asarray(rb.state.e[b]),
+                                      np.asarray(rs.state.e))
+        np.testing.assert_array_equal(np.asarray(rb.state.h[b]),
+                                      np.asarray(rs.state.h))
+        np.testing.assert_array_equal(np.asarray(rb.state.cap[b]),
+                                      np.asarray(rs.state.cap))
+
+
+@pytest.mark.parametrize("B", [3, 4])  # B=4 would alias the (4,...) layout
+def test_check_no_violations_on_batched_state(B):
+    rb = maxflow_grid_batch(stack_grid_problems(_grid_problems(4, B, 6, 6)))
+    ok = check_no_violations(rb.state)
+    assert ok.shape == (B,) and bool(jnp.all(ok))
+
+
+def test_maxflow_batch_matches_scipy_oracle():
+    probs = _grid_problems(1, 4, 6, 7)
+    rb = maxflow_grid_batch(stack_grid_problems(probs))
+    for b, p in enumerate(probs):
+        ref = maxflow_grid_ref(np.asarray(p.cap_nbr), np.asarray(p.cap_src),
+                               np.asarray(p.cap_sink))
+        assert abs(float(rb.flow[b]) - ref) < 1e-4
+
+
+def test_maxflow_ragged_padding_preserves_flow():
+    """Zero-capacity padding leaves padded nodes inert: same flow, and the
+    padded single solve bit-matches the batched ragged path."""
+    rng = np.random.default_rng(2)
+    shapes = [(5, 5), (8, 8), (4, 7)]
+    probs = [GridProblem(*map(jnp.asarray, random_grid_problem(rng, h, w)))
+             for h, w in shapes]
+    out = solve_maxflow_batch(probs, bucket="max")
+    for r, p, (h, w) in zip(out, probs, shapes):
+        ref = maxflow_grid_ref(np.asarray(p.cap_nbr), np.asarray(p.cap_src),
+                               np.asarray(p.cap_sink))
+        assert abs(float(r.flow) - ref) < 1e-4
+        padded_single = maxflow_grid(pad_grid_problem(p, 8, 8))
+        assert float(r.flow) == float(padded_single.flow)
+        np.testing.assert_array_equal(
+            np.asarray(r.cut), np.asarray(padded_single.cut)[:h, :w])
+        assert r.cut.shape == (h, w)
+
+
+@pytest.mark.parametrize("bucket", ["max", "pow2", "exact"])
+def test_maxflow_bucket_modes_agree(bucket):
+    rng = np.random.default_rng(3)
+    probs = [GridProblem(*map(jnp.asarray, random_grid_problem(rng, h, w)))
+             for h, w in [(6, 6), (8, 5), (6, 6)]]
+    out = solve_maxflow_batch(probs, bucket=bucket)
+    for r, p in zip(out, probs):
+        ref = maxflow_grid_ref(np.asarray(p.cap_nbr), np.asarray(p.cap_src),
+                               np.asarray(p.cap_sink))
+        assert abs(float(r.flow) - ref) < 1e-4
+
+
+@pytest.mark.parametrize("method", ["pushrelabel", "auction"])
+def test_assignment_batch_bitmatches_loop(method):
+    # instance 0 gets a smaller max|c| -> shorter eps-scaling schedule, so
+    # the per-instance liveness masks (not just the round masks) are on trial
+    ws = np.stack([np.random.default_rng(i).integers(0, 101, (10, 10))
+                   for i in range(5)])
+    ws[0] //= 9
+    rb = solve_assignment(jnp.asarray(ws), method=method)
+    for b in range(ws.shape[0]):
+        rs = solve_assignment(jnp.asarray(ws[b]), method=method)
+        np.testing.assert_array_equal(np.asarray(rb.col_of_row[b]),
+                                      np.asarray(rs.col_of_row))
+        np.testing.assert_array_equal(np.asarray(rb.p_x[b]),
+                                      np.asarray(rs.p_x))
+        np.testing.assert_array_equal(np.asarray(rb.p_y[b]),
+                                      np.asarray(rs.p_y))
+        assert int(rb.weight[b]) == int(rs.weight) == optimal_weight(ws[b])
+        assert int(rb.rounds[b]) == int(rs.rounds)
+        assert int(rb.pushes[b]) == int(rs.pushes)
+        assert int(rb.relabels[b]) == int(rs.relabels)
+        assert bool(rb.converged[b]) and bool(rs.converged)
+
+
+def test_assignment_batch_pallas_backend():
+    ws = np.stack([np.random.default_rng(i).integers(0, 101, (12, 12))
+                   for i in range(3)])
+    rb = solve_assignment(jnp.asarray(ws), backend="pallas")
+    for b in range(3):
+        assert int(rb.weight[b]) == optimal_weight(ws[b])
+
+
+def test_assignment_ragged_padding():
+    """pad_cost_matrix's bonus shift forces real-real matchings: ragged
+    batches recover each instance's exact optimum (incl. negative weights)."""
+    ws = [np.random.default_rng(i).integers(-30, 71, (n, n))
+          for i, n in enumerate([4, 9, 6, 9])]
+    out = solve_assignment_batch(ws, bucket="max")
+    for r, w in zip(out, ws):
+        n = w.shape[0]
+        assert sorted(np.asarray(r.col_of_row).tolist()) == list(range(n))
+        assert int(r.weight) == optimal_weight(w)
+    # and the batched padded solve bit-matches a loop of padded singles
+    padded = [pad_cost_matrix(w, 9)[0] for w in ws]
+    rb = solve_assignment(jnp.stack(padded))
+    for b, wp in enumerate(padded):
+        rs = solve_assignment(wp)
+        np.testing.assert_array_equal(np.asarray(rb.col_of_row[b]),
+                                      np.asarray(rs.col_of_row))
+        assert int(rb.rounds[b]) == int(rs.rounds)
+
+
+def test_assignment_ragged_unconverged_weight_is_guarded():
+    """An instance that hits max_rounds may hold dummy-column matches: its
+    col values stay >= n (detectable) and contribute 0 to weight instead of
+    a clamped arbitrary real entry."""
+    ws = [np.random.default_rng(i).integers(0, 101, (n, n))
+          for i, n in enumerate([4, 12])]
+    out = solve_assignment_batch(ws, bucket="max", max_rounds=1,
+                                 rounds_per_heuristic=1)
+    assert any(not bool(r.converged) for r in out)  # the scenario is live
+    for r, w in zip(out, ws):
+        n = w.shape[0]
+        col = np.asarray(r.col_of_row)
+        real = col < n
+        # valid matches are a partial matching (no duplicated real column);
+        # unmatched rows carry the >= n sentinel instead of aliasing col 0
+        assert len(set(col[real].tolist())) == real.sum()
+        expect = int(w[np.arange(n)[real], col[real]].sum())
+        assert int(r.weight) == expect
+
+
+def test_batch_empty_inputs():
+    """An empty request queue is a no-op, not a crash."""
+    assert solve_maxflow_batch([]) == []
+    assert solve_assignment_batch([]) == []
+
+
+def test_routing_batched_matches_per_group():
+    """The batch-polymorphic routers equal a loop over groups — the MoE
+    'all groups in one dispatch' path is exactly the per-group path."""
+    rng = np.random.default_rng(0)
+    G, T, E, k = 3, 32, 8, 2
+    cap = int(T * k / E * 1.25)
+    s = jnp.asarray(rng.normal(size=(G, T, E)).astype(np.float32))
+    for fn in (topk_route, auction_route):
+        rb = fn(s, k, cap)
+        for g in range(G):
+            rg = fn(s[g], k, cap)
+            np.testing.assert_array_equal(np.asarray(rb.dispatch[g]),
+                                          np.asarray(rg.dispatch))
+            np.testing.assert_array_equal(np.asarray(rb.combine[g]),
+                                          np.asarray(rg.combine))
+            np.testing.assert_array_equal(np.asarray(rb.prices[g]),
+                                          np.asarray(rg.prices))
+        assert rb.demand.shape == (G, E)

@@ -68,6 +68,28 @@ def test_grid_push_kernel_vs_ref(H, W, bh, bw):
     np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_r))
 
 
+def test_grid_push_kernel_batched_grid():
+    """Batched mode (pallas grid gains a batch dim) == per-instance kernel."""
+    rng = np.random.default_rng(7)
+    B, H, W = 3, 16, 16
+    probs = [random_grid_problem(rng, H, W) for _ in range(B)]
+    e = jnp.asarray(np.stack([p[1] for p in probs]))
+    cap = jnp.asarray(np.stack([p[0] for p in probs], axis=1))  # (4, B, H, W)
+    ct = jnp.asarray(np.stack([p[2] for p in probs]))
+    n = jnp.int32(H * W + 2)
+    h = bfs_heights(cap, ct, jnp.zeros((B, H, W), jnp.int32), n, H * W + 2)
+    from repro.core.maxflow.grid import _nbr_h
+    nbr_h = jnp.stack([_nbr_h(h, d) for d in range(4)], axis=0)
+    h_b, d_b = grid_push_decide(e, h, cap, nbr_h, e, ct, n,
+                                block_h=8, block_w=8, interpret=True)
+    for b in range(B):
+        h_s, d_s = grid_push_decide(
+            e[b], h[b], cap[:, b], nbr_h[:, b], e[b], ct[b], n,
+            block_h=8, block_w=8, interpret=True)
+        np.testing.assert_array_equal(np.asarray(h_b[b]), np.asarray(h_s))
+        np.testing.assert_array_equal(np.asarray(d_b[:, b]), np.asarray(d_s))
+
+
 def test_grid_push_round_bit_identical():
     """Full Jacobi rounds via the kernel == pure-jnp rounds, 5 steps."""
     rng = np.random.default_rng(1)

@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # optional-hypothesis shim
 
 from repro.core.maxflow.grid import (GridProblem, check_no_violations,
                                      maxflow_grid)

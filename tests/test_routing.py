@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # optional-hypothesis shim
 from scipy.optimize import linear_sum_assignment
 
 from repro.core.routing import auction_route, exact_route, topk_route

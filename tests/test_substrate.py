@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # optional-hypothesis shim
 
 from repro.data.pipeline import DataConfig, host_batch, rows_batch
 from repro.models.mamba import _ssd_chunked
