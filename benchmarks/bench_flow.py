@@ -100,6 +100,59 @@ def bench_batched(rows):
                      f"mean_rounds={float(jnp.mean(res.rounds)):.0f}"))
 
 
+def bench_sharded(rows):
+    """Batch-axis sharding over the device mesh: instances/sec vs devices.
+
+    Run with emulated host devices to see >1 device on CPU:
+
+        XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+            PYTHONPATH=src python -m benchmarks.run sharded
+
+    Numbers land in benchmarks/RESULTS_sharded.md. dev=0 rows are the
+    unsharded batched baseline (no shard_map in the dispatch).
+    """
+    import jax
+
+    from repro.core.batch import stack_grid_problems
+    from repro.core.maxflow.grid import GridProblem, maxflow_grid_batch
+    from repro.core.maxflow.ref import random_grid_problem
+    from repro.core.assignment.cost_scaling import solve_assignment
+    from repro.launch.mesh import make_solver_mesh
+
+    n_dev = len(jax.devices())
+    counts = [c for c in (1, 2, 4, 8) if c <= n_dev]
+    rng = np.random.default_rng(0)
+
+    hw, B = 32, 32
+    prob = stack_grid_problems(
+        [GridProblem(*map(jnp.asarray, random_grid_problem(
+            rng, hw, hw, max_cap=20, terminal_density=0.3)))
+         for _ in range(B)])
+    us0 = _time(maxflow_grid_batch, prob, reps=2)
+    rows.append((f"maxflow_sharded_B{B}_{hw}x{hw}_dev0", us0,
+                 f"inst_per_s={B / us0 * 1e6:.1f};unsharded_baseline"))
+    for c in counts:
+        mesh = make_solver_mesh(c)
+        us = _time(maxflow_grid_batch, prob, mesh=mesh, reps=2)
+        rows.append((f"maxflow_sharded_B{B}_{hw}x{hw}_dev{c}", us,
+                     f"inst_per_s={B / us * 1e6:.1f};"
+                     f"speedup_vs_unsharded={us0 / us:.2f}x"))
+
+    n = 48
+    ws = jnp.asarray(np.stack([
+        np.random.default_rng(i).integers(0, 101, (n, n))
+        for i in range(B)]), jnp.int32)
+    us0 = _time(solve_assignment, ws, reps=2)
+    rows.append((f"assignment_sharded_B{B}_n{n}_dev0", us0,
+                 f"inst_per_s={B / us0 * 1e6:.1f};unsharded_baseline"))
+    for c in counts:
+        mesh = make_solver_mesh(c)
+        us = _time(solve_assignment, ws, mesh=mesh, reps=2)
+        rows.append((f"assignment_sharded_B{B}_n{n}_dev{c}", us,
+                     f"inst_per_s={B / us * 1e6:.1f};"
+                     f"speedup_vs_unsharded={us0 / us:.2f}x"))
+
+
 def bench_assignment(rows):
     """Paper §6: n<=30, costs<=100, ~1/20 s on a GTX 560 Ti."""
     from repro.core.assignment.cost_scaling import solve_assignment

@@ -11,7 +11,7 @@ import sys
 from benchmarks.bench_flow import (bench_assignment, bench_batched,
                                    bench_flash_kernel, bench_kernels,
                                    bench_maxflow, bench_refine_ops,
-                                   bench_routing)
+                                   bench_routing, bench_sharded)
 
 
 def main() -> None:
@@ -20,6 +20,7 @@ def main() -> None:
     benches = {
         "maxflow": bench_maxflow,
         "batched": bench_batched,
+        "sharded": bench_sharded,
         "assignment": bench_assignment,
         "refine_ops": bench_refine_ops,
         "routing": bench_routing,

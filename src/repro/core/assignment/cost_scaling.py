@@ -324,30 +324,18 @@ def _refine(c, eps, st: _RefineState, *, method: str, max_rounds: int,
 @functools.partial(jax.jit, static_argnames=(
     "method", "alpha", "max_rounds", "rounds_per_heuristic",
     "use_price_update", "use_arc_fixing", "backend"))
-def solve_assignment(
+def _solve_assignment_impl(
     w: jax.Array,
     *,
-    method: str = "auction",
-    alpha: int = 10,
-    max_rounds: int = 200_000,
-    rounds_per_heuristic: int = 16,
-    use_price_update: bool = True,
-    use_arc_fixing: bool = True,
-    backend: str = "xla",
+    method: str,
+    alpha: int,
+    max_rounds: int,
+    rounds_per_heuristic: int,
+    use_price_update: bool,
+    use_arc_fixing: bool,
+    backend: str,
 ) -> AssignmentResult:
-    """Max-weight perfect matching on a complete bipartite graph.
-
-    ``alpha=10`` is the paper's scaling factor (§5.5). Integer weights only
-    (exactness of the (n+1)-scaling argument); floats should be pre-quantized
-    by the caller. Requires n·(n+1)·max|w| within int32 range.
-
-    ``w`` may be ``(n, n)`` (one instance) or ``(B, n, n)`` (a batch solved
-    in one dispatch — see ``repro.core.batch.solve_assignment_batch`` for the
-    list-of-matrices front end). Each instance runs its own ε-scaling
-    schedule (ε starts at that instance's max|c|); instances that finish
-    early are frozen by liveness masks, so batched results bit-match a loop
-    of single-instance solves.
-    """
+    """Jitted solver body, rank-polymorphic (shard_map-able on (B, n, n))."""
     n = w.shape[-1]
     w_i = jnp.asarray(w, jnp.int32)
     batch = w_i.shape[:-2]
@@ -399,3 +387,76 @@ def solve_assignment(
         rounds=st.rounds, pushes=st.pushes, relabels=st.relabels,
         converged=_is_perfect(st.F),
     )
+
+
+def solve_assignment(
+    w: jax.Array,
+    *,
+    method: str = "auction",
+    alpha: int = 10,
+    max_rounds: int = 200_000,
+    rounds_per_heuristic: int = 16,
+    use_price_update: bool = True,
+    use_arc_fixing: bool = True,
+    backend: str = "xla",
+    mesh=None,
+    mesh_axis: str | None = None,
+) -> AssignmentResult:
+    """Max-weight perfect matching on a complete bipartite graph (paper §5).
+
+    Args:
+      w: integer weight matrix — ``(n, n)`` for one instance or ``(B, n, n)``
+        for a batch solved in one dispatch (see
+        ``repro.core.batch.solve_assignment_batch`` for the ragged
+        list-of-matrices front end). Integer weights only (exactness of the
+        (n+1)-scaling argument); floats should be pre-quantized by the
+        caller. Requires ``n * (n+1) * max|w|`` within int32 range.
+      method: ``"auction"`` (beyond-paper top-2 bidding refine, fewer
+        rounds) or ``"pushrelabel"`` (paper-faithful Algorithm 5.4).
+      alpha: ε-scaling divisor; 10 is the paper's factor (§5.5).
+      max_rounds: per-refine Jacobi-round cap; an instance that hits it
+        reports ``converged=False`` and may leave rows unmatched (their
+        ``col_of_row`` entries hold the sentinel ``n``).
+      rounds_per_heuristic: Jacobi rounds between price-update sweeps.
+      use_price_update: run the vectorized Bellman–Ford price-update
+        heuristic (paper Alg. 5.3).
+      use_arc_fixing: freeze arcs with ``c_p > 2nε`` between refines
+        (paper §5.2).
+      backend: ``"xla"`` or ``"pallas"`` (the bidding/min stage as a TPU
+        kernel).
+      mesh: optional ``jax.sharding.Mesh``
+        (``repro.launch.mesh.make_solver_mesh``). Requires batched ``w``
+        ``(B, n, n)`` with ``B`` divisible by the shard count; the batch
+        axis is then partitioned under ``shard_map`` — each device refines
+        its own instances with no cross-device sync (per-instance ε
+        schedules and liveness masks already make instances independent),
+        and results bit-match the unsharded batched solve
+        (tests/test_shard.py).
+      mesh_axis: mesh axis to shard over (default: the mesh's first axis).
+
+    Returns:
+      ``AssignmentResult`` with leaves leading with the batch axes of ``w``:
+      ``col_of_row (..., n)`` (sentinel ``n`` = unmatched row, only when not
+      converged), ``weight (...,)`` on the original scale, prices
+      ``p_x``/``p_y (..., n)``, operation counters, and ``converged``.
+
+    Convergence contract: each instance runs its own ε-scaling schedule
+    (ε starts at that instance's max|c| and divides by ``alpha`` down to 1);
+    ``converged=True`` means the final 1-optimal flow is an EXACT optimal
+    matching (Goldberg–Kennedy integer scaling). Instances that finish early
+    are frozen by liveness masks, so batched results bit-match a loop of
+    single-instance solves (tests/test_batch.py).
+    """
+    kw = dict(method=method, alpha=alpha, max_rounds=max_rounds,
+              rounds_per_heuristic=rounds_per_heuristic,
+              use_price_update=use_price_update,
+              use_arc_fixing=use_arc_fixing, backend=backend)
+    if mesh is None:
+        return _solve_assignment_impl(w, **kw)
+    if w.ndim != 3:
+        raise ValueError(
+            f"mesh-sharded solve_assignment needs batched (B, n, n) weights, "
+            f"got shape {w.shape}")
+    from repro.launch.mesh import dispatch_sharded
+    return dispatch_sharded(_solve_assignment_impl, (w,), w.shape[0],
+                            mesh, mesh_axis, **kw)

@@ -20,6 +20,15 @@ Bucketing contract (``bucket=``):
     padding waste (< 4x area for grids, < 2x for matrices).
   * ``"exact"``— no padding: one dispatch per distinct shape.
 Results are always returned in input order, cropped back to original sizes.
+
+Sharding (``mesh=``): pass a ``jax.sharding.Mesh``
+(``repro.launch.mesh.make_solver_mesh``) and each bucket's batch axis is
+partitioned across the mesh under ``shard_map``. Buckets whose size is not a
+multiple of the shard count are padded with INERT instances (zero-capacity
+grids / zero-weight matrices) that converge immediately and are dropped
+before returning — so ragged queues of any size shard cleanly, and results
+still bit-match the unsharded path (tests/test_shard.py). See
+docs/batching.md for the full semantics.
 """
 from __future__ import annotations
 
@@ -36,7 +45,7 @@ from repro.core.maxflow.grid import (GridFlowResult, GridProblem,
 
 __all__ = [
     "pad_grid_problem", "stack_grid_problems", "pad_cost_matrix",
-    "solve_maxflow_batch", "solve_assignment_batch",
+    "inert_grid_problem", "solve_maxflow_batch", "solve_assignment_batch",
 ]
 
 
@@ -52,6 +61,14 @@ def _bucket_shape(shape: tuple, mode: str, max_shape: tuple) -> tuple:
     if mode == "exact":
         return shape
     raise ValueError(f"unknown bucket mode: {mode!r}")
+
+
+def _shard_pad(n_real: int, mesh, mesh_axis) -> int:
+    """Inert instances to append so the bucket batch splits evenly on mesh."""
+    if mesh is None:
+        return 0
+    from repro.launch.mesh import shard_count
+    return -n_real % shard_count(mesh, mesh_axis)
 
 
 # ---------------------------------------------------------------- max-flow
@@ -84,19 +101,45 @@ def stack_grid_problems(problems: Sequence[GridProblem]) -> GridProblem:
     )
 
 
+def inert_grid_problem(H: int, W: int) -> GridProblem:
+    """An all-zero-capacity instance: no excess, converges in 0 rounds.
+
+    Used to pad a bucket's batch to a multiple of the mesh shard count —
+    inert instances never push, relabel, or affect their batch-mates (the
+    solvers' masks are per instance), so appending them is value-preserving.
+    """
+    return GridProblem(
+        cap_nbr=jnp.zeros((4, H, W), jnp.float32),
+        cap_src=jnp.zeros((H, W), jnp.float32),
+        cap_sink=jnp.zeros((H, W), jnp.float32),
+    )
+
+
 def solve_maxflow_batch(
     problems: Iterable[GridProblem],
     *,
     bucket: str = "max",
     backend: str = "xla",
+    mesh=None,
+    mesh_axis: str | None = None,
     **solver_kw,
 ) -> list[GridFlowResult]:
     """Solve many (possibly ragged) grid-cut instances in batched dispatches.
 
-    Instances are padded to their bucket shape, stacked, and solved by
-    ``maxflow_grid_batch`` — one jitted call per bucket. Returns one
-    ``GridFlowResult`` per instance in input order, with ``cut`` and state
-    planes cropped back to the instance's original (H, W).
+    Args:
+      problems: iterable of ``GridProblem`` instances (any mix of shapes).
+      bucket: ``"max"`` | ``"pow2"`` | ``"exact"`` — see the module
+        docstring / docs/batching.md for the dispatch-count vs padding-waste
+        trade-off.
+      backend: solver round implementation (``"xla"`` | ``"multipush"`` |
+        ``"pallas"``), forwarded to ``maxflow_grid_batch``.
+      mesh / mesh_axis: optional device mesh — each bucket's batch axis is
+        sharded across it, with inert zero-capacity instances appended so
+        every bucket splits evenly (dropped before returning).
+      **solver_kw: forwarded to ``maxflow_grid_batch`` (e.g. ``max_rounds``).
+
+    Returns one ``GridFlowResult`` per instance in input order, with ``cut``
+    and state planes cropped back to the instance's original (H, W).
     """
     problems = [GridProblem(*(jnp.asarray(a) for a in p)) for p in problems]
     if not problems:
@@ -110,9 +153,12 @@ def solve_maxflow_batch(
 
     results: list[GridFlowResult | None] = [None] * len(problems)
     for (H, W), idxs in buckets.items():
-        stacked = stack_grid_problems(
-            [pad_grid_problem(problems[i], H, W) for i in idxs])
-        res = maxflow_grid_batch(stacked, backend=backend, **solver_kw)
+        padded = [pad_grid_problem(problems[i], H, W) for i in idxs]
+        padded += [inert_grid_problem(H, W)] * _shard_pad(
+            len(idxs), mesh, mesh_axis)
+        stacked = stack_grid_problems(padded)
+        res = maxflow_grid_batch(stacked, backend=backend, mesh=mesh,
+                                 mesh_axis=mesh_axis, **solver_kw)
         for b, i in enumerate(idxs):
             h, w = shapes[i]
             st = res.state
@@ -162,21 +208,33 @@ def solve_assignment_batch(
     costs: Sequence,
     *,
     bucket: str = "max",
+    mesh=None,
+    mesh_axis: str | None = None,
     **solver_kw,
 ) -> list[AssignmentResult]:
     """Solve many (possibly ragged) assignment instances in batched dispatches.
 
-    ``costs`` is a sequence of square integer weight matrices. Same-bucket
-    instances are padded with ``pad_cost_matrix``, stacked to (B, m, m), and
-    solved by the batch-polymorphic ``solve_assignment`` in one dispatch per
-    bucket. Returns one ``AssignmentResult`` per instance in input order:
-    ``col_of_row`` is cropped to the original n (a permutation of range(n)
-    when ``converged`` — guaranteed by the bonus-shifted padding), ``weight``
-    is recomputed on the ORIGINAL weights, and prices keep the padded
-    solver's values (cropped). If an instance did NOT converge (hit
-    ``max_rounds``), rows may still point at dummy columns: their col values
-    stay >= n so callers can detect them, and they contribute 0 to
-    ``weight`` rather than a clamped arbitrary entry.
+    Args:
+      costs: sequence of square integer weight matrices (ragged ``n`` fine).
+      bucket: ``"max"`` | ``"pow2"`` | ``"exact"`` bucketing of the matrix
+        sizes — see docs/batching.md.
+      mesh / mesh_axis: optional device mesh — each bucket's batch axis is
+        sharded across it, with inert zero-weight matrices appended so every
+        bucket splits evenly (dropped before returning).
+      **solver_kw: forwarded to ``solve_assignment`` (``method=``,
+        ``max_rounds=``, ``backend=``, ...).
+
+    Same-bucket instances are padded with ``pad_cost_matrix``, stacked to
+    (B, m, m), and solved by the batch-polymorphic ``solve_assignment`` in
+    one dispatch per bucket. Returns one ``AssignmentResult`` per instance
+    in input order: ``col_of_row`` is cropped to the original n (a
+    permutation of range(n) when ``converged`` — guaranteed by the
+    bonus-shifted padding), ``weight`` is recomputed on the ORIGINAL
+    weights, and prices keep the padded solver's values (cropped). If an
+    instance did NOT converge (hit ``max_rounds``), rows may still point at
+    dummy columns: their col values stay >= n so callers can detect them,
+    and they contribute 0 to ``weight`` rather than a clamped arbitrary
+    entry.
     """
     costs = [np.asarray(w) for w in costs]
     if not costs:
@@ -191,8 +249,15 @@ def solve_assignment_batch(
 
     results: list[AssignmentResult | None] = [None] * len(costs)
     for (m,), idxs in buckets.items():
-        stacked = jnp.stack([pad_cost_matrix(costs[i], m)[0] for i in idxs])
-        res = solve_assignment(stacked, **solver_kw)
+        mats = [pad_cost_matrix(costs[i], m)[0] for i in idxs]
+        # inert shard padding: zero-weight instances (any perfect matching
+        # is optimal; converges in one short eps=1 refine) that other
+        # instances never observe
+        mats += [jnp.zeros((m, m), jnp.int32)] * _shard_pad(
+            len(idxs), mesh, mesh_axis)
+        stacked = jnp.stack(mats)
+        res = solve_assignment(stacked, mesh=mesh, mesh_axis=mesh_axis,
+                               **solver_kw)
         for b, i in enumerate(idxs):
             n = sizes[i]
             col = res.col_of_row[b, :n]

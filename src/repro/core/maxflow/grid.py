@@ -367,11 +367,33 @@ def maxflow_grid(
     bfs_max_iters: int = 0,
     backend: str = "xla",
 ) -> GridFlowResult:
-    """Max-flow on a grid graph; returns flow value, min-cut labels, state.
+    """Max-flow / min-cut of ONE grid-cut instance (paper §4 on TPU).
 
-    ``rounds_per_heuristic`` is the paper's CYCLE constant (§4.6, CYCLE=7000 on
-    a GTX 560 Ti; far smaller here because our heuristic costs one on-device
-    fixpoint, not a host round-trip).
+    Args:
+      problem: ``GridProblem`` with ``cap_nbr (4, H, W)``,
+        ``cap_src``/``cap_sink`` ``(H, W)``. Integer-valued capacities are
+        recommended (float32 sums over them stay exact, making results
+        reproducible bit-for-bit across batching/sharding layouts).
+      rounds_per_heuristic: Jacobi rounds between global-relabel BFS passes —
+        the paper's CYCLE constant (§4.6, CYCLE=7000 on a GTX 560 Ti; far
+        smaller here because our heuristic costs one on-device fixpoint, not
+        a host round-trip).
+      max_rounds: hard round cap; if hit, ``converged`` is False and
+        ``flow``/``cut`` describe the partial state.
+      bfs_max_iters: BFS wavefront cap (0 = the H*W+2 upper bound).
+      backend: ``"xla"`` (paper-faithful Jacobi round), ``"multipush"``
+        (beyond-paper: saturate every lower neighbour per round), or
+        ``"pallas"`` (the round's decision stage as a TPU kernel).
+
+    Returns:
+      ``GridFlowResult``: scalar ``flow`` (== min-cut value when
+      ``converged``), ``cut (H, W)`` bool (True = sink side of a minimum
+      cut), the final ``GridFlowState``, scalar ``rounds`` and ``converged``.
+
+    Convergence contract: ``converged`` is True iff no node holds positive
+    excess, at which point ``flow`` is the exact max-flow value (the solver
+    is exact, not approximate — termination follows the paper's §4
+    potential argument).
     """
     cap0, cs0, ct0 = problem
     if cs0.ndim != 2 or cap0.ndim != 3:
@@ -391,33 +413,9 @@ def maxflow_grid(
     static_argnames=("rounds_per_heuristic", "max_rounds", "bfs_max_iters",
                      "backend"),
 )
-def maxflow_grid_batch(
-    problem: GridProblem,
-    *,
-    rounds_per_heuristic: int = 32,
-    max_rounds: int = 100_000,
-    bfs_max_iters: int = 0,
-    backend: str = "xla",
-) -> GridFlowResult:
-    """Max-flow on a BATCH of same-shape grid instances in one dispatch.
-
-    ``problem`` arrays carry a leading batch axis: ``cap_nbr`` is
-    ``(B, 4, H, W)`` (a plain stack of single-instance problems),
-    ``cap_src``/``cap_sink`` are ``(B, H, W)``. Returns a ``GridFlowResult``
-    whose leaves are batched the same way (``flow``/``rounds``/``converged``
-    are ``(B,)``; ``state.cap`` is returned as ``(B, 4, H, W)``).
-
-    Runs the SAME shared loop as ``maxflow_grid`` with batch shape ``(B,)``:
-    per-instance liveness masks freeze converged instances, so results
-    bit-match a solo ``maxflow_grid`` run of each (padded) instance. Ragged
-    batches are handled upstream by ``repro.core.batch`` (zero-capacity
-    padding leaves padded nodes inert and the flow value unchanged).
-    """
-    cap0, cs0, ct0 = problem
-    if cap0.ndim != 4 or cap0.shape[1] != 4 or cs0.ndim != 3:
-        raise ValueError(
-            f"maxflow_grid_batch expects cap_nbr (B, 4, H, W), got "
-            f"{cap0.shape}; use maxflow_grid for a single instance")
+def _grid_batch_impl(cap0, cs0, ct0, *, rounds_per_heuristic, max_rounds,
+                     bfs_max_iters, backend) -> GridFlowResult:
+    """Batched solve in the public (B, ...) layout (shard_map-able body)."""
     res = _solve_grid(jnp.moveaxis(cap0, 1, 0), cs0, ct0,
                       rounds_per_heuristic=rounds_per_heuristic,
                       max_rounds=max_rounds, bfs_max_iters=bfs_max_iters,
@@ -425,3 +423,60 @@ def maxflow_grid_batch(
     # public layout: batch axis leads everywhere, including state.cap
     return res._replace(
         state=res.state._replace(cap=jnp.moveaxis(res.state.cap, 0, 1)))
+
+
+def maxflow_grid_batch(
+    problem: GridProblem,
+    *,
+    rounds_per_heuristic: int = 32,
+    max_rounds: int = 100_000,
+    bfs_max_iters: int = 0,
+    backend: str = "xla",
+    mesh=None,
+    mesh_axis: str | None = None,
+) -> GridFlowResult:
+    """Max-flow on a BATCH of same-shape grid instances in one dispatch.
+
+    Args:
+      problem: ``GridProblem`` with a leading batch axis — ``cap_nbr``
+        ``(B, 4, H, W)`` (a plain stack of single-instance problems),
+        ``cap_src``/``cap_sink`` ``(B, H, W)``.
+      rounds_per_heuristic / max_rounds / bfs_max_iters / backend: as in
+        ``maxflow_grid`` (applied per instance).
+      mesh: optional ``jax.sharding.Mesh`` (see
+        ``repro.launch.mesh.make_solver_mesh``). When given, the batch axis
+        is partitioned across the mesh under ``shard_map``: each device
+        solves ``B // shard_count`` instances with NO cross-device
+        communication (per-instance liveness masks make shards independent;
+        a shard whose instances all converge finishes its dispatch early).
+        ``B`` must be divisible by the shard count — the pad-and-bucket
+        front end (``repro.core.batch``) pads ragged queues with inert
+        instances instead of raising.
+      mesh_axis: which mesh axis to shard over (default: the mesh's first
+        axis, ``"batch"`` for solver meshes).
+
+    Returns:
+      ``GridFlowResult`` whose leaves lead with the batch axis:
+      ``flow``/``rounds``/``converged`` are ``(B,)``, ``cut`` is
+      ``(B, H, W)``, and ``state.cap`` is returned as ``(B, 4, H, W)``.
+
+    Bit-match contract: runs the SAME shared loop as ``maxflow_grid`` with
+    batch shape ``(B,)`` — per-instance liveness masks freeze converged
+    instances, so results bit-match a loop of solo ``maxflow_grid`` runs,
+    and the sharded path bit-matches the unsharded one (an instance's
+    trajectory never depends on its batch-mates; tests/test_batch.py,
+    tests/test_shard.py).
+    """
+    cap0, cs0, ct0 = problem
+    if cap0.ndim != 4 or cap0.shape[1] != 4 or cs0.ndim != 3:
+        raise ValueError(
+            f"maxflow_grid_batch expects cap_nbr (B, 4, H, W), got "
+            f"{cap0.shape}; use maxflow_grid for a single instance")
+    kw = dict(rounds_per_heuristic=rounds_per_heuristic,
+              max_rounds=max_rounds, bfs_max_iters=bfs_max_iters,
+              backend=backend)
+    if mesh is None:
+        return _grid_batch_impl(cap0, cs0, ct0, **kw)
+    from repro.launch.mesh import dispatch_sharded
+    return dispatch_sharded(_grid_batch_impl, (cap0, cs0, ct0),
+                            cs0.shape[0], mesh, mesh_axis, **kw)

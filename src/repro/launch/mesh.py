@@ -1,8 +1,33 @@
-"""Production meshes. A function (not a constant): importing this module
-must never touch jax device state."""
+"""Mesh construction + sharding specs for the solver stack and the models.
+
+Every factory is a function (not a constant): importing this module must
+never touch jax device state.
+
+Two mesh families live here:
+
+* model meshes (``make_production_mesh`` / ``make_host_mesh``) — the
+  ``("data", "model")`` meshes the transformer stack shards over, and
+* solver meshes (``make_solver_mesh``) — a 1-D ``("batch",)`` mesh for the
+  batched flow/matching solvers, whose batch axis is embarrassingly
+  data-parallel (per-instance liveness masks make every instance's
+  trajectory independent of its batch-mates, so shards never communicate).
+
+``shard_batched`` is the one sharding primitive the solver stack uses: it
+wraps a batch-leading function in ``shard_map`` with the leading axis
+partitioned across the mesh and everything else replicated. Because the
+wrapped solvers contain no collectives, each device runs its local shard's
+while-loops to local convergence — a fully-converged shard simply finishes
+its dispatch early. Results bit-match the unsharded batched solve
+(tests/test_shard.py).
+"""
 from __future__ import annotations
 
+import functools
+from typing import Callable
+
 import jax
+import numpy as np
+from jax.sharding import PartitionSpec
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -18,3 +43,98 @@ def make_host_mesh(model_parallel: int = 1):
     assert n % model_parallel == 0
     return jax.make_mesh((n // model_parallel, model_parallel),
                          ("data", "model"))
+
+
+def make_solver_mesh(n_devices: int | None = None, *, axis: str = "batch"):
+    """1-D device mesh for batch-axis sharding of the batched solvers.
+
+    Args:
+      n_devices: how many local devices to use (default: all). Emulate a
+        multi-device host on CPU with
+        ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+      axis: mesh axis name; the solvers' default sharding axis is "batch".
+
+    Returns a ``jax.sharding.Mesh`` accepted by the ``mesh=`` knob of
+    ``maxflow_grid_batch`` / ``solve_assignment`` /
+    ``repro.core.batch.solve_*_batch``.
+    """
+    devs = jax.devices()
+    if n_devices is not None:
+        if not 1 <= n_devices <= len(devs):
+            raise ValueError(
+                f"n_devices={n_devices} outside [1, {len(devs)}] available")
+        devs = devs[:n_devices]
+    return jax.sharding.Mesh(np.array(devs), (axis,))
+
+
+def solver_batch_axis(mesh, mesh_axis: str | None = None) -> str:
+    """The mesh axis the batch dimension shards over (default: first axis)."""
+    axis = mesh_axis if mesh_axis is not None else mesh.axis_names[0]
+    if axis not in mesh.axis_names:
+        raise ValueError(f"axis {axis!r} not in mesh axes {mesh.axis_names}")
+    return axis
+
+
+def shard_count(mesh, mesh_axis: str | None = None) -> int:
+    """Number of shards the batch axis splits into on ``mesh``."""
+    return int(mesh.shape[solver_batch_axis(mesh, mesh_axis)])
+
+
+def batch_spec(mesh, mesh_axis: str | None = None) -> PartitionSpec:
+    """PartitionSpec sharding a leading batch axis; trailing axes replicate.
+
+    Used as a pytree-prefix spec: one ``PartitionSpec("batch")`` covers every
+    leaf of the solvers' problem/result pytrees, because every public leaf
+    leads with the batch axis.
+    """
+    return PartitionSpec(solver_batch_axis(mesh, mesh_axis))
+
+
+def shard_batched(fn: Callable, mesh, mesh_axis: str | None = None):
+    """Wrap a batch-leading ``fn`` so the batch axis splits across ``mesh``.
+
+    ``fn`` must take array/pytree arguments whose every leaf has the batch
+    dimension leading, and return a pytree with the same property. The
+    returned callable is ``jit(shard_map(fn))`` with the batch axis
+    partitioned and no replication checking (the solvers are collective-free,
+    every output is sharded).
+
+    The caller is responsible for ``B % shard_count(mesh) == 0``; the core
+    entry points raise a ``ValueError`` otherwise and the pad-and-bucket
+    front end pads with inert instances instead.
+    """
+    try:  # stable namespace (newer jax); experimental alias as fallback
+        from jax import shard_map
+    except ImportError:
+        from jax.experimental.shard_map import shard_map
+
+    spec = batch_spec(mesh, mesh_axis)
+    return jax.jit(shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec,
+                             check_rep=False))
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_shard_batched(impl: Callable, mesh, mesh_axis, kw_items: tuple):
+    return shard_batched(functools.partial(impl, **dict(kw_items)),
+                         mesh, mesh_axis)
+
+
+def dispatch_sharded(impl: Callable, args: tuple, batch_size: int, mesh,
+                     mesh_axis: str | None, **static_kw):
+    """Run batched ``impl(*args, **static_kw)`` with the batch axis sharded.
+
+    The one mesh-dispatch funnel the solvers' ``mesh=`` paths share:
+    validates ``batch_size`` divides the shard count, memoizes the
+    jit(shard_map(...)) callable per (impl, mesh, mesh_axis, kwargs), and
+    calls it. ``impl`` must be hashable (a module-level function) and
+    ``static_kw`` values hashable.
+    """
+    n_shards = shard_count(mesh, mesh_axis)
+    if batch_size % n_shards:
+        raise ValueError(
+            f"batch size {batch_size} not divisible by shard count "
+            f"{n_shards}; pad the batch (repro.core.batch does this "
+            f"automatically)")
+    fn = _cached_shard_batched(impl, mesh, mesh_axis,
+                               tuple(sorted(static_kw.items())))
+    return fn(*args)

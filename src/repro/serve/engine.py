@@ -1,7 +1,18 @@
-"""Serving: prefill + decode steps with batched requests.
+"""Serving: batched model decode AND the batched-solver request path.
 
-``serve_step`` is what the decode_* / long_* dry-run shapes lower: one new
-token for every request in the batch against a full KV/SSM cache.
+Two engines live here:
+
+* the LLM path — ``make_prefill_step`` / ``make_serve_step``: one new token
+  for every request in the batch against a full KV/SSM cache (what the
+  decode_* / long_* dry-run shapes lower), and
+* the solver path — ``SolverEngine``: the ROADMAP's request-queue →
+  pad-and-bucket → (mesh-sharded) batched-solve pipeline for the paper's
+  flow/matching solvers. Requests of mixed kinds and ragged shapes are
+  queued with ``submit_maxflow`` / ``submit_assignment`` and solved together
+  on ``flush()`` — grids and cost matrices are bucketed and padded by
+  ``repro.core.batch``, every bucket is one jitted dispatch, and an optional
+  device mesh shards each bucket's batch axis (``shard_map``, zero
+  cross-device traffic; see docs/batching.md).
 """
 from __future__ import annotations
 
@@ -9,6 +20,7 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.layers import Sharder
@@ -49,6 +61,107 @@ def make_serve_step(cfg: ModelConfig, axes, shd: Sharder,
         nxt = jnp.argmax(out.logits[:, -1], axis=-1).astype(jnp.int32)
         return nxt, ServeState(out.caches, nxt, state.lengths + 1)
     return serve_step
+
+
+class SolverEngine:
+    """Request queue -> pad-and-bucket -> (sharded) batched solve.
+
+    The serving front door for the paper's two solvers. Callers ``submit_*``
+    problems as they arrive and receive integer tickets; ``flush()`` solves
+    everything pending — max-flow requests through
+    ``repro.core.batch.solve_maxflow_batch`` and assignment requests through
+    ``solve_assignment_batch`` — and returns ``{ticket: result}``. Results
+    are exactly what the direct front-end calls would return (same padding,
+    same bucketing, bit-identical values), so correctness is inherited from
+    the tested batch path.
+
+    Args:
+      mesh / mesh_axis: optional ``jax.sharding.Mesh``
+        (``repro.launch.mesh.make_solver_mesh``) — each bucket's batch axis
+        is sharded across the mesh; ragged bucket sizes are padded with
+        inert instances automatically.
+      bucket: bucketing policy for ragged queues (``"max"`` | ``"pow2"`` |
+        ``"exact"``, see docs/batching.md).
+      maxflow_kw / assignment_kw: per-kind solver keyword overrides
+        (``backend=``, ``method=``, ``max_rounds=``, ...).
+    """
+
+    def __init__(self, *, mesh=None, mesh_axis: str | None = None,
+                 bucket: str = "max", maxflow_kw: dict | None = None,
+                 assignment_kw: dict | None = None):
+        self.mesh, self.mesh_axis, self.bucket = mesh, mesh_axis, bucket
+        self.maxflow_kw = dict(maxflow_kw or {})
+        self.assignment_kw = dict(assignment_kw or {})
+        self._next_ticket = 0
+        self._maxflow: list[tuple[int, Any]] = []
+        self._assignment: list[tuple[int, Any]] = []
+
+    def _ticket(self) -> int:
+        t, self._next_ticket = self._next_ticket, self._next_ticket + 1
+        return t
+
+    def submit_maxflow(self, problem) -> int:
+        """Queue a ``GridProblem`` (any (H, W)); returns its ticket.
+
+        Malformed requests are rejected HERE (before a ticket is issued) so
+        ``flush`` cannot be wedged by a bad queue entry.
+        """
+        cap, cs, ct = (jnp.asarray(a) for a in problem)
+        if cap.ndim != 3 or cap.shape[0] != 4 or cs.shape != ct.shape \
+                or cs.shape != cap.shape[1:]:
+            raise ValueError(
+                f"malformed grid problem: cap_nbr {cap.shape}, "
+                f"cap_src {cs.shape}, cap_sink {ct.shape}; expected "
+                f"(4, H, W) / (H, W) / (H, W)")
+        t = self._ticket()
+        self._maxflow.append((t, problem))
+        return t
+
+    def submit_assignment(self, w) -> int:
+        """Queue a square integer weight matrix (any n); returns its ticket.
+
+        Rejects non-square or non-integer matrices at submit time.
+        """
+        w = np.asarray(w)
+        if w.ndim != 2 or w.shape[0] != w.shape[1] \
+                or not np.issubdtype(w.dtype, np.integer):
+            raise ValueError(
+                f"malformed assignment request: need a square integer "
+                f"matrix, got shape {w.shape} dtype {w.dtype}")
+        t = self._ticket()
+        self._assignment.append((t, w))
+        return t
+
+    def pending(self) -> int:
+        """Number of queued, unsolved requests."""
+        return len(self._maxflow) + len(self._assignment)
+
+    def flush(self) -> dict[int, Any]:
+        """Solve every pending request; returns ``{ticket: result}``.
+
+        One batched dispatch per (kind, bucket shape); the queue is emptied
+        even if a request did not converge (check ``result.converged``).
+        """
+        from repro.core.batch import (solve_assignment_batch,
+                                      solve_maxflow_batch)
+        out: dict[int, Any] = {}
+        if self._maxflow:
+            tickets, probs = zip(*self._maxflow)
+            res = solve_maxflow_batch(
+                list(probs), bucket=self.bucket, mesh=self.mesh,
+                mesh_axis=self.mesh_axis, **self.maxflow_kw)
+            out.update(zip(tickets, res))
+        if self._assignment:
+            tickets, ws = zip(*self._assignment)
+            res = solve_assignment_batch(
+                list(ws), bucket=self.bucket, mesh=self.mesh,
+                mesh_axis=self.mesh_axis, **self.assignment_kw)
+            out.update(zip(tickets, res))
+        # clear only after BOTH kinds solved: a raise above (e.g. a malformed
+        # request) leaves the queues intact so no ticket is silently dropped
+        self._maxflow.clear()
+        self._assignment.clear()
+        return out
 
 
 def greedy_generate(cfg, params, axes, shd, prompt_tokens, max_new: int,

@@ -1,0 +1,39 @@
+"""Documentation snippets must execute — README/docs code cannot rot.
+
+Every fenced ```python block in README.md and docs/*.md is extracted at
+collection time and exec'd as its own test (CI's docs job runs exactly
+this file; see .github/workflows/ci.yml). Keep doc snippets small and
+self-contained: each runs in a fresh namespace with no setup.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DOC_FILES = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+
+_FENCE = re.compile(r"```python\n(.*?)```", re.S)
+
+
+def _snippets():
+    out = []
+    for path in DOC_FILES:
+        for i, src in enumerate(_FENCE.findall(path.read_text())):
+            out.append(pytest.param(
+                path, src, id=f"{path.relative_to(ROOT)}#{i}"))
+    return out
+
+
+def test_docs_exist_and_have_snippets():
+    assert (ROOT / "README.md").is_file()
+    assert (ROOT / "docs" / "batching.md").is_file()
+    assert len(_snippets()) >= 3, "docs lost their executable examples"
+
+
+@pytest.mark.parametrize("path,src", _snippets())
+def test_doc_snippet_executes(path, src):
+    code = compile(src, f"{path.name}:snippet", "exec")
+    exec(code, {"__name__": "__doc_snippet__"})

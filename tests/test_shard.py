@@ -1,0 +1,198 @@
+"""Sharded-vs-unsharded equivalence: shard_map over the batch axis is exact.
+
+The contract under test (ROADMAP "device-mesh sharding", docs/batching.md):
+partitioning the batch axis of ``maxflow_grid_batch`` / batched
+``solve_assignment`` / the ``repro.core.batch`` ragged front ends across a
+device mesh changes WHERE instances are solved, never WHAT is solved — every
+result leaf bit-matches the unsharded batched solve. This holds because an
+instance's trajectory never depends on its batch-mates (all reductions run
+over the trailing data axes; liveness masks are per instance) and the
+sharded body contains no collectives.
+
+Multi-device is emulated on CPU: when this file runs in a single-device
+process, ``test_forced_multi_device_subprocess`` relaunches it under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the flag must be set
+before jax initializes, hence the subprocess). CI runs the file directly
+with the flag exported — see .github/workflows/ci.yml.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.assignment.cost_scaling import solve_assignment
+from repro.core.batch import solve_assignment_batch, solve_maxflow_batch
+from repro.core.maxflow.grid import GridProblem, maxflow_grid_batch
+from repro.core.maxflow.ref import random_grid_problem
+from repro.launch.mesh import (batch_spec, make_solver_mesh, shard_count,
+                               solver_batch_axis)
+from repro.serve.engine import SolverEngine
+
+N_DEV = len(jax.devices())
+FORCE_FLAG = "--xla_force_host_platform_device_count=8"
+multi = pytest.mark.skipif(
+    N_DEV < 2, reason="needs >=2 devices; covered via the subprocess test")
+
+# 2 and the full device count (8 under the forced flag) — the acceptance
+# criterion asks for >=2 emulated devices; exercising two different shard
+# counts also covers uneven real-work distribution.
+SHARD_COUNTS = sorted({2, N_DEV}) if N_DEV >= 2 else []
+
+
+def _grid_problems(seed, B, H, W):
+    rng = np.random.default_rng(seed)
+    return [GridProblem(*map(jnp.asarray, random_grid_problem(rng, H, W)))
+            for _ in range(B)]
+
+
+def _assert_trees_equal(a, b):
+    for name, la, lb in zip(a._fields, a, b):
+        if isinstance(la, tuple):  # nested NamedTuple (GridFlowState)
+            _assert_trees_equal(la, lb)
+        else:
+            np.testing.assert_array_equal(
+                np.asarray(la), np.asarray(lb), err_msg=name)
+
+
+@pytest.mark.slow  # ~1 min: full shard suite in a fresh 8-device process
+@pytest.mark.skipif(N_DEV >= 2, reason="already multi-device")
+def test_forced_multi_device_subprocess():
+    """Relaunch this file under 8 emulated host devices and require green."""
+    root = pathlib.Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " " + FORCE_FLAG).strip()
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "-x", "-q", str(__file__)],
+        cwd=root, env=env, capture_output=True, text=True, timeout=1500)
+    assert r.returncode == 0, f"\n--- stdout ---\n{r.stdout}\n{r.stderr}"
+    assert "passed" in r.stdout
+
+
+def test_solver_mesh_shape():
+    mesh = make_solver_mesh()
+    assert mesh.axis_names == ("batch",)
+    assert solver_batch_axis(mesh) == "batch"
+    assert shard_count(mesh) == N_DEV
+    assert batch_spec(mesh) == jax.sharding.PartitionSpec("batch")
+    with pytest.raises(ValueError):
+        make_solver_mesh(N_DEV + 1)
+    with pytest.raises(ValueError):
+        solver_batch_axis(mesh, "model")
+
+
+@multi
+@pytest.mark.parametrize("backend", ["xla", "multipush"])
+def test_maxflow_sharded_bitmatch(backend):
+    probs = _grid_problems(0, 8, 8, 8)
+    from repro.core.batch import stack_grid_problems
+    batch = stack_grid_problems(probs)
+    base = maxflow_grid_batch(batch, backend=backend)
+    for s in SHARD_COUNTS:
+        res = maxflow_grid_batch(batch, backend=backend,
+                                 mesh=make_solver_mesh(s))
+        _assert_trees_equal(res, base)
+
+
+@multi
+@pytest.mark.parametrize("method", ["pushrelabel", "auction"])
+def test_assignment_sharded_bitmatch(method):
+    # heterogeneous difficulty: instance 0 has a shorter eps schedule, so
+    # shards carry genuinely different amounts of work
+    ws = np.stack([np.random.default_rng(i).integers(0, 101, (10, 10))
+                   for i in range(8)])
+    ws[0] //= 9
+    base = solve_assignment(jnp.asarray(ws), method=method)
+    for s in SHARD_COUNTS:
+        res = solve_assignment(jnp.asarray(ws), method=method,
+                               mesh=make_solver_mesh(s))
+        _assert_trees_equal(res, base)
+
+
+@multi
+def test_maxflow_ragged_sharded_via_bucket_front_end():
+    """Ragged queues (sizes NOT divisible by the shard count) shard via the
+    inert-padding path and still bit-match the unsharded front end."""
+    rng = np.random.default_rng(2)
+    shapes = [(5, 5), (8, 8), (4, 7), (8, 8), (5, 5)]   # 5 instances
+    probs = [GridProblem(*map(jnp.asarray, random_grid_problem(rng, h, w)))
+             for h, w in shapes]
+    for bucket in ("max", "pow2"):
+        base = solve_maxflow_batch(probs, bucket=bucket)
+        for s in SHARD_COUNTS:
+            res = solve_maxflow_batch(probs, bucket=bucket,
+                                      mesh=make_solver_mesh(s))
+            for a, b in zip(res, base):
+                _assert_trees_equal(a, b)
+
+
+@multi
+def test_assignment_ragged_sharded_via_bucket_front_end():
+    ws = [np.random.default_rng(i).integers(-30, 71, (n, n))
+          for i, n in enumerate([4, 9, 6, 9, 5])]        # ragged, odd count
+    base = solve_assignment_batch(ws, bucket="max")
+    for s in SHARD_COUNTS:
+        res = solve_assignment_batch(ws, bucket="max",
+                                     mesh=make_solver_mesh(s))
+        for a, b in zip(res, base):
+            _assert_trees_equal(a, b)
+
+
+@multi
+def test_sharded_batch_must_divide():
+    probs = _grid_problems(3, 3, 6, 6)
+    from repro.core.batch import stack_grid_problems
+    with pytest.raises(ValueError, match="not divisible"):
+        maxflow_grid_batch(stack_grid_problems(probs),
+                           mesh=make_solver_mesh(2))
+    ws = jnp.asarray(np.random.default_rng(0).integers(0, 9, (3, 5, 5)))
+    with pytest.raises(ValueError, match="not divisible"):
+        solve_assignment(ws, mesh=make_solver_mesh(2))
+    with pytest.raises(ValueError, match="batched"):
+        solve_assignment(ws[0], mesh=make_solver_mesh(2))
+
+
+def test_solver_engine_matches_direct_front_end():
+    """The serve path returns exactly what the direct batch calls return
+    (runs at any device count; sharded when >1 device is available)."""
+    mesh = make_solver_mesh() if N_DEV >= 2 else None
+    engine = SolverEngine(mesh=mesh, bucket="max")
+    rng = np.random.default_rng(7)
+    probs = [GridProblem(*map(jnp.asarray, random_grid_problem(rng, h, w)))
+             for h, w in [(6, 6), (4, 5), (6, 6)]]
+    ws = [rng.integers(0, 50, (n, n)) for n in (5, 7)]
+
+    tickets = [engine.submit_maxflow(p) for p in probs]
+    tickets += [engine.submit_assignment(w) for w in ws]
+    assert engine.pending() == 5
+    out = engine.flush()
+    assert engine.pending() == 0 and sorted(out) == tickets
+
+    base_f = solve_maxflow_batch(probs, bucket="max", mesh=mesh)
+    base_a = solve_assignment_batch(ws, bucket="max", mesh=mesh)
+    for t, b in zip(tickets, base_f + base_a):
+        _assert_trees_equal(out[t], b)
+
+
+def test_solver_engine_rejects_malformed_at_submit():
+    """Bad requests are refused BEFORE a ticket exists, so a queue can never
+    hold an entry that would wedge flush(); good tickets are unaffected."""
+    engine = SolverEngine()
+    rng = np.random.default_rng(0)
+    t = engine.submit_maxflow(
+        GridProblem(*map(jnp.asarray, random_grid_problem(rng, 4, 4))))
+    with pytest.raises(ValueError, match="malformed assignment"):
+        engine.submit_assignment(np.ones((3, 4)))       # non-square
+    with pytest.raises(ValueError, match="malformed assignment"):
+        engine.submit_assignment(np.ones((3, 3)))       # non-integer
+    with pytest.raises(ValueError, match="malformed grid"):
+        engine.submit_maxflow(GridProblem(
+            jnp.zeros((4, 5, 5)), jnp.zeros((5, 4)), jnp.zeros((5, 4))))
+    assert engine.pending() == 1
+    out = engine.flush()                                # still solvable
+    assert sorted(out) == [t] and engine.pending() == 0
