@@ -17,7 +17,7 @@ def _time(fn, *args, reps=3, **kw):
     return (time.perf_counter() - t0) / reps * 1e6  # us
 
 
-def bench_maxflow(rows):
+def bench_maxflow(rows, repeats=2):
     """Paper §4: push-relabel on grid graphs (vision-scale sizes)."""
     from repro.core.maxflow.grid import GridProblem, maxflow_grid
     from repro.core.maxflow.ref import random_grid_problem
@@ -28,14 +28,14 @@ def bench_maxflow(rows):
         prob = GridProblem(jnp.asarray(cap), jnp.asarray(cs),
                            jnp.asarray(ct))
         res = maxflow_grid(prob)
-        us = _time(maxflow_grid, prob, reps=2)
+        us = _time(maxflow_grid, prob, reps=repeats)
         rows.append((f"maxflow_grid_{hw}x{hw}", us,
                      f"flow={float(res.flow):.0f};rounds={int(res.rounds)};"
                      f"Mnode_rounds_per_s="
                      f"{hw*hw*int(res.rounds)/us:.1f}"))
 
 
-def bench_batched(rows):
+def bench_batched(rows, repeats=2):
     """Batched multi-instance engine vs vmap-of-single (instances/sec).
 
     ``jax.vmap(maxflow_grid)`` is a strong baseline: vmap's while_loop
@@ -70,8 +70,8 @@ def bench_batched(rows):
     for B in (1, 8, 64):
         prob = stack_grid_problems(raw[:B])
         res = maxflow_grid_batch(prob)
-        us = _time(maxflow_grid_batch, prob, reps=2)
-        us_v = _time(vmap_flow, prob, reps=2)
+        us = _time(maxflow_grid_batch, prob, reps=repeats)
+        us_v = _time(vmap_flow, prob, reps=repeats)
         rows.append((f"maxflow_batch_B{B}_{hw}x{hw}", us,
                      f"inst_per_s={B / us * 1e6:.1f};"
                      f"vmap_inst_per_s={B / us_v * 1e6:.1f};"
@@ -91,8 +91,8 @@ def bench_batched(rows):
     for B in (1, 8, 64):
         w = ws[:B]
         res = solve_assignment(w)
-        us = _time(solve_assignment, w, reps=2)
-        us_v = _time(vmap_assign, w, reps=2)
+        us = _time(solve_assignment, w, reps=repeats)
+        us_v = _time(vmap_assign, w, reps=repeats)
         rows.append((f"assignment_batch_B{B}_n{n}", us,
                      f"inst_per_s={B / us * 1e6:.1f};"
                      f"vmap_inst_per_s={B / us_v * 1e6:.1f};"
@@ -100,7 +100,7 @@ def bench_batched(rows):
                      f"mean_rounds={float(jnp.mean(res.rounds)):.0f}"))
 
 
-def bench_sharded(rows):
+def bench_sharded(rows, repeats=2):
     """Batch-axis sharding over the device mesh: instances/sec vs devices.
 
     Run with emulated host devices to see >1 device on CPU:
@@ -128,12 +128,12 @@ def bench_sharded(rows):
         [GridProblem(*map(jnp.asarray, random_grid_problem(
             rng, hw, hw, max_cap=20, terminal_density=0.3)))
          for _ in range(B)])
-    us0 = _time(maxflow_grid_batch, prob, reps=2)
+    us0 = _time(maxflow_grid_batch, prob, reps=repeats)
     rows.append((f"maxflow_sharded_B{B}_{hw}x{hw}_dev0", us0,
                  f"inst_per_s={B / us0 * 1e6:.1f};unsharded_baseline"))
     for c in counts:
         mesh = make_solver_mesh(c)
-        us = _time(maxflow_grid_batch, prob, mesh=mesh, reps=2)
+        us = _time(maxflow_grid_batch, prob, mesh=mesh, reps=repeats)
         rows.append((f"maxflow_sharded_B{B}_{hw}x{hw}_dev{c}", us,
                      f"inst_per_s={B / us * 1e6:.1f};"
                      f"speedup_vs_unsharded={us0 / us:.2f}x"))
@@ -142,18 +142,73 @@ def bench_sharded(rows):
     ws = jnp.asarray(np.stack([
         np.random.default_rng(i).integers(0, 101, (n, n))
         for i in range(B)]), jnp.int32)
-    us0 = _time(solve_assignment, ws, reps=2)
+    us0 = _time(solve_assignment, ws, reps=repeats)
     rows.append((f"assignment_sharded_B{B}_n{n}_dev0", us0,
                  f"inst_per_s={B / us0 * 1e6:.1f};unsharded_baseline"))
     for c in counts:
         mesh = make_solver_mesh(c)
-        us = _time(solve_assignment, ws, mesh=mesh, reps=2)
+        us = _time(solve_assignment, ws, mesh=mesh, reps=repeats)
         rows.append((f"assignment_sharded_B{B}_n{n}_dev{c}", us,
                      f"inst_per_s={B / us * 1e6:.1f};"
                      f"speedup_vs_unsharded={us0 / us:.2f}x"))
 
 
-def bench_assignment(rows):
+def bench_compaction(rows, repeats=2):
+    """Early-exit compaction vs the masked baseline (instances/sec).
+
+    A ragged-convergence batch — most instances converge within the first
+    heuristic cycles, a few stragglers run long — is where the ROADMAP's
+    compaction item pays: the masked path select-freezes converged
+    instances but keeps computing full-batch cycles until the LAST
+    straggler drains, while ``compact=True`` gathers the live instances
+    into pow2-sized sub-batches so per-cycle FLOPs track the live count.
+    Results are bit-identical (tests/test_compact.py); numbers land in
+    benchmarks/RESULTS_compaction.md.
+    """
+    from repro.core.batch import stack_grid_problems
+    from repro.core.maxflow.grid import GridProblem, maxflow_grid_batch
+    from repro.core.maxflow.ref import random_grid_problem
+    from repro.core.assignment.cost_scaling import solve_assignment
+
+    rng = np.random.default_rng(0)
+    hw, B, hard = 64, 32, 4
+    probs = []
+    for i in range(B):
+        cap, cs, ct = random_grid_problem(rng, hw, hw, max_cap=20,
+                                          terminal_density=0.3)
+        if i >= hard:  # easy: almost no excess -> converge in early cycles
+            cs = np.minimum(cs, 1.0)
+        probs.append(GridProblem(*map(jnp.asarray, (cap, cs, ct))))
+    prob = stack_grid_problems(probs)
+    res = maxflow_grid_batch(prob)
+    rag = (f"rounds_min={int(jnp.min(res.rounds))};"
+           f"rounds_max={int(jnp.max(res.rounds))}")
+    us_m = _time(maxflow_grid_batch, prob, reps=repeats)
+    rows.append((f"maxflow_masked_B{B}_{hw}x{hw}", us_m,
+                 f"inst_per_s={B / us_m * 1e6:.1f};{rag}"))
+    us_c = _time(maxflow_grid_batch, prob, compact=True, reps=repeats)
+    rows.append((f"maxflow_compact_B{B}_{hw}x{hw}", us_c,
+                 f"inst_per_s={B / us_c * 1e6:.1f};"
+                 f"speedup_vs_masked={us_m / us_c:.2f}x"))
+
+    n = 64
+    ws = np.stack([np.random.default_rng(i).integers(0, 101, (n, n))
+                   for i in range(B)])
+    ws[hard:] //= 25     # easy: small max|c| -> short eps schedules
+    w = jnp.asarray(ws, jnp.int32)
+    res = solve_assignment(w)
+    rag = (f"rounds_min={int(jnp.min(res.rounds))};"
+           f"rounds_max={int(jnp.max(res.rounds))}")
+    us_m = _time(solve_assignment, w, reps=repeats)
+    rows.append((f"assignment_masked_B{B}_n{n}", us_m,
+                 f"inst_per_s={B / us_m * 1e6:.1f};{rag}"))
+    us_c = _time(solve_assignment, w, compact=True, reps=repeats)
+    rows.append((f"assignment_compact_B{B}_n{n}", us_c,
+                 f"inst_per_s={B / us_c * 1e6:.1f};"
+                 f"speedup_vs_masked={us_m / us_c:.2f}x"))
+
+
+def bench_assignment(rows, repeats=2):
     """Paper §6: n<=30, costs<=100, ~1/20 s on a GTX 560 Ti."""
     from repro.core.assignment.cost_scaling import solve_assignment
     rng = np.random.default_rng(0)
@@ -161,7 +216,7 @@ def bench_assignment(rows):
         w = jnp.asarray(rng.integers(0, 101, (n, n)), jnp.int32)
         for method in ("pushrelabel", "auction"):
             res = solve_assignment(w, method=method)
-            us = _time(solve_assignment, w, method=method)
+            us = _time(solve_assignment, w, method=method, reps=repeats)
             note = ""
             if n == 30:
                 note = f";paper_50000us_speedup={50_000/us:.1f}x"
@@ -170,7 +225,7 @@ def bench_assignment(rows):
                          f"rounds={int(res.rounds)}" + note))
 
 
-def bench_refine_ops(rows):
+def bench_refine_ops(rows, repeats=2):
     """Operation-count scaling (the paper analyzes O(n^2 m) op bounds)."""
     from repro.core.assignment.cost_scaling import solve_assignment
     rng = np.random.default_rng(1)
@@ -185,7 +240,7 @@ def bench_refine_ops(rows):
                      f"bound_n2m={n**2 * n * n}" + growth))
 
 
-def bench_routing(rows):
+def bench_routing(rows, repeats=2):
     """Flow router vs top-k: drops, balance, overhead (MoE integration)."""
     from repro.core.routing import auction_route, topk_route
     rng = np.random.default_rng(0)
@@ -195,7 +250,7 @@ def bench_routing(rows):
     s = s.at[:, 0].add(2.0)  # hot expert
     for name, fn in (("topk", topk_route), ("flow", auction_route)):
         r = fn(s, k, cap)
-        us = _time(fn, s, k, cap)
+        us = _time(fn, s, k, cap, reps=repeats)
         d = np.asarray(r.dispatch)
         load = d.sum(0)
         rows.append((f"route_{name}_T{T}_E{E}", us,
@@ -203,7 +258,7 @@ def bench_routing(rows):
                      f"load_cv={load.std()/load.mean():.3f}"))
 
 
-def bench_kernels(rows):
+def bench_kernels(rows, repeats=2):
     """Bidding kernel tile sweep (interpret on CPU: correctness-scale)."""
     from repro.kernels.bidding.kernel import bidding
     from repro.kernels.bidding.ref import bidding_ref
@@ -212,17 +267,17 @@ def bench_kernels(rows):
     c = jnp.asarray(rng.integers(-1000, 1000, (n, n)), jnp.int32)
     p = jnp.asarray(rng.integers(-500, 500, (n,)), jnp.int32)
     m = jnp.asarray(rng.random((n, n)) < 0.3)
-    us_ref = _time(bidding_ref, c, p, m)
+    us_ref = _time(bidding_ref, c, p, m, reps=repeats)
     rows.append((f"bidding_ref_xla_n{n}", us_ref, "oracle"))
     for br, bc in ((128, 128), (256, 256), (256, 512)):
         vmem_kib = (br * bc * 5 + bc * 4 + br * 12) / 1024
         us = _time(bidding, c, p, m, block_rows=br, block_cols=bc,
-                   interpret=True)
+                   interpret=True, reps=repeats)
         rows.append((f"bidding_kernel_{br}x{bc}_interp", us,
                      f"vmem_per_step_KiB={vmem_kib:.0f}"))
 
 
-def bench_flash_kernel(rows):
+def bench_flash_kernel(rows, repeats=2):
     """Flash-attention Pallas kernel vs jnp flash path (interpret on CPU)."""
     from repro.kernels.flash_attention.kernel import flash_attention_fwd
     from repro.kernels.flash_attention.ref import flash_attention_ref
@@ -233,11 +288,11 @@ def bench_flash_kernel(rows):
     q = jnp.asarray(rng.normal(size=(B, S, H, dh)).astype(np.float32))
     k = jnp.asarray(rng.normal(size=(B, S, KV, dh)).astype(np.float32))
     v = jnp.asarray(rng.normal(size=(B, S, KV, dh)).astype(np.float32))
-    us_ref = _time(flash_attention_ref, q, k, v)
+    us_ref = _time(flash_attention_ref, q, k, v, reps=repeats)
     rows.append((f"flash_ref_xla_S{S}", us_ref, "dense oracle"))
     for bq, bk in ((128, 128), (256, 512)):
         vmem = (bq * dh + 2 * bk * dh + bq * bk + bq * (dh + 2)) * 4 / 1024
         us = _time(flash_attention_fwd, q, k, v, block_q=bq, block_k=bk,
-                   interpret=True)
+                   interpret=True, reps=repeats)
         rows.append((f"flash_kernel_{bq}x{bk}_interp", us,
                      f"vmem_per_step_KiB={vmem:.0f}"))

@@ -3,34 +3,56 @@
 Prints ``name,us_per_call,derived`` CSV (plus a trailing roofline pointer:
 the dry-run roofline table lives in EXPERIMENTS.md and
 results/dryrun_*.json).
+
+Usage::
+
+    python -m benchmarks.run [bench] [--repeats N]
+
+Unknown bench names are rejected with the list of available benches
+(previously they silently printed an empty CSV).
 """
 from __future__ import annotations
 
-import sys
+import argparse
 
 from benchmarks.bench_flow import (bench_assignment, bench_batched,
-                                   bench_flash_kernel, bench_kernels,
-                                   bench_maxflow, bench_refine_ops,
-                                   bench_routing, bench_sharded)
+                                   bench_compaction, bench_flash_kernel,
+                                   bench_kernels, bench_maxflow,
+                                   bench_refine_ops, bench_routing,
+                                   bench_sharded)
+
+BENCHES = {
+    "maxflow": bench_maxflow,
+    "batched": bench_batched,
+    "sharded": bench_sharded,
+    "compaction": bench_compaction,
+    "assignment": bench_assignment,
+    "refine_ops": bench_refine_ops,
+    "routing": bench_routing,
+    "kernels": bench_kernels,
+    "flash": bench_flash_kernel,
+}
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
+    parser = argparse.ArgumentParser(
+        prog="python -m benchmarks.run",
+        description="Run one benchmark (or all) and print CSV to stdout.")
+    parser.add_argument(
+        "bench", nargs="?", choices=sorted(BENCHES), metavar="bench",
+        help=f"which benchmark to run (default: all). "
+             f"Available: {', '.join(sorted(BENCHES))}")
+    parser.add_argument(
+        "--repeats", type=int, default=2,
+        help="timed repetitions per measurement after the compile call "
+             "(default: %(default)s)")
+    args = parser.parse_args(argv)
+
     rows: list[tuple] = []
-    only = sys.argv[1] if len(sys.argv) > 1 else None
-    benches = {
-        "maxflow": bench_maxflow,
-        "batched": bench_batched,
-        "sharded": bench_sharded,
-        "assignment": bench_assignment,
-        "refine_ops": bench_refine_ops,
-        "routing": bench_routing,
-        "kernels": bench_kernels,
-        "flash": bench_flash_kernel,
-    }
-    for name, fn in benches.items():
-        if only and only != name:
+    for name, fn in BENCHES.items():
+        if args.bench and args.bench != name:
             continue
-        fn(rows)
+        fn(rows, repeats=args.repeats)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -1,3 +1,43 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Public surface of the solver core (the paper's two algorithms + engine).
+
+The paper's primary contribution — synchronous data-parallel flow and
+matching solvers — lives here:
+
+* ``maxflow_grid`` / ``maxflow_grid_batch`` — push-relabel max-flow /
+  min-cut on 2-D grid graphs (paper §4), single instance or ``(B, 4, H, W)``
+  stacks with per-instance convergence.
+* ``solve_assignment`` — cost-scaling max-weight perfect matching
+  (paper §5), ``(n, n)`` or ``(B, n, n)``.
+* ``solve_maxflow_batch`` / ``solve_assignment_batch`` — the pad-and-bucket
+  front end for ragged collections (``repro.core.batch``).
+* ``freeze`` — the per-instance liveness select behind batched solving
+  (``repro.core.masking``).
+* ``LoopSpec`` / ``run_masked`` / ``run_compacted`` — the unified
+  solver-loop runtime (``repro.core.solver_loop``): masked iteration and
+  early-exit compaction, shared by both solvers.
+
+Every entry point accepts ``mesh=`` (device-mesh batch sharding) and the
+batched ones ``compact=`` (early-exit compaction); see docs/batching.md.
+"""
+from repro.core.assignment.cost_scaling import (AssignmentResult,
+                                               solve_assignment)
+from repro.core.batch import solve_assignment_batch, solve_maxflow_batch
+from repro.core.masking import freeze
+from repro.core.maxflow.grid import (GridFlowResult, GridProblem,
+                                     maxflow_grid, maxflow_grid_batch)
+from repro.core.solver_loop import LoopSpec, run_compacted, run_masked
+
+__all__ = [
+    "AssignmentResult",
+    "GridFlowResult",
+    "GridProblem",
+    "LoopSpec",
+    "freeze",
+    "maxflow_grid",
+    "maxflow_grid_batch",
+    "run_compacted",
+    "run_masked",
+    "solve_assignment",
+    "solve_assignment_batch",
+    "solve_maxflow_batch",
+]

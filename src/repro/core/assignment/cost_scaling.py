@@ -28,12 +28,16 @@ baseline recorded in EXPERIMENTS.md.
 
 Batching: every function is shape-polymorphic over leading batch axes —
 ``w`` may be ``(n, n)`` or ``(B, n, n)``, with prices ``(..., n)``, counters
-``(...,)`` and ε carried per instance. The scalar loop predicates become
-liveness masks: an instance that reaches a perfect matching (or finishes its
-ε-scaling schedule, which depends on its own max|c|) is frozen via a select
-while the rest of the batch keeps refining, so batched results bit-match a
-loop of single-instance solves. ``solve_assignment`` accepts both ranks; the
-pad-and-bucket front end for ragged batches lives in ``repro.core.batch``.
+``(...,)`` and ε carried per instance. Orchestration is delegated to the
+unified runtime of ``repro.core.solver_loop``: the nested ε-scaling/refine
+loops are flattened into one per-instance cycle (``_ScaleState``) so an
+instance that reaches a perfect matching (or finishes its ε-scaling
+schedule, which depends on its own max|c|) can be frozen via a select —
+masked mode — or dropped from the working set entirely — ``compact=True``,
+early-exit compaction — while the rest of the batch keeps refining. Either
+way batched results bit-match a loop of single-instance solves.
+``solve_assignment`` accepts both ranks; the pad-and-bucket front end for
+ragged batches lives in ``repro.core.batch``.
 """
 from __future__ import annotations
 
@@ -42,6 +46,8 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.solver_loop import LoopSpec, run_compacted, run_masked
 
 INF = jnp.int32(2 ** 30)
 
@@ -255,70 +261,145 @@ def price_update(c, eps, st: _RefineState, max_sweeps: int) -> _RefineState:
     return st._replace(p_x=st.p_x - e1 * l_x, p_y=st.p_y - e1 * l_y)
 
 
-def _refine(c, eps, st: _RefineState, *, method: str, max_rounds: int,
-            rounds_per_heuristic: int, use_price_update: bool,
-            use_arc_fixing: bool, backend: str = "xla",
-            live=None) -> _RefineState:
-    """Paper Algorithm 5.2: strip the flow, reprice X, push/relabel to a flow.
+class _ScaleState(NamedTuple):
+    """Flattened per-instance ε-scaling carry for the solver-loop runtime.
 
-    The while-loop predicate is per-instance: an instance whose pseudoflow is
-    already a perfect matching is frozen (its state selected through
-    unchanged) while the rest of the batch keeps refining. ``live`` (from the
-    ε-scaling caller) excludes instances that already finished their schedule
-    — their (discarded) garbage state must not keep the loop spinning.
+    The paper's nested loops — Alg. 5.2's ε schedule around Alg. 5.4's
+    refine — are flattened into ONE heuristic cycle so the runtime
+    (``repro.core.solver_loop``) can freeze or compact instances at cycle
+    granularity: each instance carries its own in-flight ε, its Jacobi-round
+    count within the current refine, and its schedule-liveness flag, and the
+    cycle performs refine-completion transitions (arc fixing, ε downstep,
+    refine re-init) per instance the moment ITS refine finishes — not when
+    the whole batch's does. Per-instance state trajectories are identical to
+    the nested form (every transition is per-instance pure), which is what
+    lets compacted, masked, and single-instance solves bit-match.
     """
-    n = c.shape[-1]
-    # lines 3-6: F <- 0; p(x) <- -min_y (c'_p(x,y) + eps)
-    st = st._replace(F=jnp.zeros_like(st.F))
+
+    c: jax.Array      # (..., n, n) scaled costs (per-instance constants)
+    eps: jax.Array    # (...,) ε of the refine currently in flight
+    k: jax.Array      # (...,) Jacobi rounds inside the current refine
+    alive: jax.Array  # (...,) bool: ε schedule not yet finished
+    st: _RefineState
+
+
+def _refine_init(c, eps, st: _RefineState) -> _RefineState:
+    """Refine entry (Alg. 5.2 lines 3-6): strip the flow, reprice X —
+    ``F <- 0; p(x) <- -min_y (c'_p(x,y) + eps)``."""
     cpx = _masked(c - st.p_y[..., None, :], st.fixed)
-    st = st._replace(p_x=-(jnp.min(cpx, axis=-1) + _exp(eps, 1)))
+    return st._replace(F=jnp.zeros_like(st.F),
+                       p_x=-(jnp.min(cpx, axis=-1) + _exp(eps, 1)))
 
-    def unfinished(F):
-        u = ~_is_perfect(F)
-        return u if live is None else u & live
 
+def _scale_init(w, *, alpha: int) -> _ScaleState:
+    """Initial flat state: per-instance ε = ceil(max|c| / alpha), first
+    refine entered (Alg. 5.0 start)."""
+    w_i = jnp.asarray(w, jnp.int32)
+    n = w_i.shape[-1]
+    batch = w_i.shape[:-2]
+    c = -(n + 1) * w_i                                   # minimization form
+    C = jnp.maximum(jnp.max(jnp.abs(c), axis=(-2, -1)), 1)   # (...,) per inst
+    eps0 = jnp.maximum(1, -(-C // alpha))                # eps <- ceil(C/alpha)
+    st = _RefineState(
+        F=jnp.zeros(batch + (n, n), jnp.int32),
+        p_x=jnp.zeros(batch + (n,), jnp.int32),
+        p_y=jnp.zeros(batch + (n,), jnp.int32),
+        fixed=jnp.zeros(batch + (n, n), jnp.bool_),
+        rounds=jnp.zeros(batch, jnp.int32),
+        pushes=jnp.zeros(batch, jnp.int32),
+        relabels=jnp.zeros(batch, jnp.int32),
+    )
+    return _ScaleState(c=c, eps=eps0, k=jnp.zeros(batch, jnp.int32),
+                       alive=jnp.ones(batch, jnp.bool_),
+                       st=_refine_init(c, eps0, st))
+
+
+@functools.lru_cache(maxsize=None)
+def _assignment_spec(method: str, alpha: int, max_rounds: int,
+                     rounds_per_heuristic: int, use_price_update: bool,
+                     use_arc_fixing: bool, backend: str) -> LoopSpec:
+    """The assignment solver's registration with the solver-loop runtime.
+
+    One cycle = ``rounds_per_heuristic`` Jacobi rounds of the refine round
+    function, the price-update sweep (paper Alg. 5.3), and — for instances
+    whose refine just finished (perfect matching or ``max_rounds`` hit) —
+    the refine-exit transition: arc fixing at the finished ε, ε downstep,
+    and re-entry into the next refine (or schedule death after the ε = 1
+    pass). Cached per static-knob tuple so the runtime's jitted drivers
+    cache-hit on the spec.
+    """
     round_fn = functools.partial(
         {"pushrelabel": _round_pushrelabel,
          "auction": _round_auction}[method], backend=backend)
 
-    def body(carry):
-        st, k = carry
-        run = unfinished(st.F)
+    def cycle(s: _ScaleState) -> _ScaleState:
+        c, eps, k, alive, st = s
+        n = c.shape[-1]
 
-        def inner(_, s):
-            return round_fn(c, eps, s)
+        def inner(_, t):
+            return round_fn(c, eps, t)
 
         new = jax.lax.fori_loop(0, rounds_per_heuristic, inner, st)
         if use_price_update:
             perf = _is_perfect(new.F)
             if perf.ndim == 0:  # single instance: genuinely skip the sweep
                 new = jax.lax.cond(
-                    perf, lambda s: s,
-                    lambda s: price_update(c, eps, s, max_sweeps=2 * n), new)
+                    perf, lambda t: t,
+                    lambda t: price_update(c, eps, t, max_sweeps=2 * n), new)
             else:
                 new = _freeze(~perf,
                               price_update(c, eps, new, max_sweeps=2 * n),
                               new)
-        st = _freeze(run, new, st)
-        return st, k + rounds_per_heuristic
+        k = k + rounds_per_heuristic
+        done = _is_perfect(new.F) | (k >= max_rounds)
+        if use_arc_fixing:
+            # Arc fixing at refine exit (paper §5.2, Goldberg [8]): now that
+            # f is a genuine ε-optimal FLOW w.r.t. p, any unmatched arc with
+            # c_p > 2nε carries zero flow in every ε'-optimal flow with
+            # ε' <= ε — freeze it for all subsequent refines. (Matched arcs
+            # always satisfy |c_p| <= ε, so only F == 0 arcs can be fixed;
+            # the mask replaces the paper's adjacency-list deletion with
+            # flow = -10 sentinels.)
+            cp = c + new.p_x[..., :, None] - new.p_y[..., None, :]
+            fix = new.fixed | ((cp > 2 * n * _exp(eps, 2)) & (new.F == 0))
+            new = new._replace(
+                fixed=jnp.where(done[..., None, None], fix, new.fixed))
+        # ε schedule step for finished refines: divide down, or die after
+        # the ε = 1 pass (Goldberg–Kennedy: 1-optimal on scaled costs =
+        # exact optimum).
+        still = alive & ~(done & (eps <= 1))
+        eps_next = jnp.where(done & (eps > 1),
+                             jnp.maximum(1, -(-eps // alpha)), eps)
+        new = _freeze(done & still, _refine_init(c, eps_next, new), new)
+        return _ScaleState(c=c, eps=eps_next, k=jnp.where(done, 0, k),
+                           alive=still, st=new)
 
-    def cond(carry):
-        st, k = carry
-        return jnp.any(unfinished(st.F)) & (k < max_rounds)
+    def live(s: _ScaleState, rounds: jax.Array) -> jax.Array:
+        return s.alive
 
-    st, _ = jax.lax.while_loop(cond, body, (st, jnp.int32(0)))
+    return LoopSpec(cycle=cycle, live=live,
+                    rounds_per_cycle=rounds_per_heuristic, lead_axes_fn=None)
 
-    if use_arc_fixing:
-        # Arc fixing (paper §5.2, Goldberg [8]): now that f is a genuine
-        # ε-optimal FLOW w.r.t. p, any unmatched arc with c_p > 2nε carries
-        # zero flow in every ε'-optimal flow with ε' <= ε — freeze it for all
-        # subsequent refines. (Matched arcs always satisfy |c_p| <= ε, so only
-        # F == 0 arcs can be fixed; the mask replaces the paper's
-        # adjacency-list deletion with flow = -10 sentinels.)
-        cp = c + st.p_x[..., :, None] - st.p_y[..., None, :]
-        st = st._replace(
-            fixed=st.fixed | ((cp > 2 * n * _exp(eps, 2)) & (st.F == 0)))
-    return st
+
+def _assignment_finalize(w, st: _RefineState) -> AssignmentResult:
+    """Matching, weight (original scale), and convergence from a final state.
+
+    Unmatched rows (all-zero F row — possible only when ``max_rounds`` was
+    hit before a perfect matching) get the sentinel ``n``, so callers can
+    always detect them; matched rows get their argmax column.
+    """
+    w_i = jnp.asarray(w, jnp.int32)
+    n = w_i.shape[-1]
+    matched = jnp.sum(st.F, axis=-1) > 0
+    col = jnp.where(matched, jnp.argmax(st.F, axis=-1), n)
+    weight = jnp.sum(jnp.where(matched, jnp.take_along_axis(
+        w_i, jnp.minimum(col, n - 1)[..., :, None], axis=-1)[..., 0], 0),
+        axis=-1)
+    return AssignmentResult(
+        col_of_row=col, weight=weight, p_x=st.p_x, p_y=st.p_y,
+        rounds=st.rounds, pushes=st.pushes, relabels=st.relabels,
+        converged=_is_perfect(st.F),
+    )
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -335,58 +416,49 @@ def _solve_assignment_impl(
     use_arc_fixing: bool,
     backend: str,
 ) -> AssignmentResult:
-    """Jitted solver body, rank-polymorphic (shard_map-able on (B, n, n))."""
-    n = w.shape[-1]
-    w_i = jnp.asarray(w, jnp.int32)
-    batch = w_i.shape[:-2]
-    c = -(n + 1) * w_i                                   # minimization form
-    C = jnp.maximum(jnp.max(jnp.abs(c), axis=(-2, -1)), 1)   # (...,) per inst
+    """Jitted solver body, rank-polymorphic (shard_map-able on (B, n, n)).
 
-    st = _RefineState(
-        F=jnp.zeros(batch + (n, n), jnp.int32),
-        p_x=jnp.zeros(batch + (n,), jnp.int32),
-        p_y=jnp.zeros(batch + (n,), jnp.int32),
-        fixed=jnp.zeros(batch + (n, n), jnp.bool_),
-        rounds=jnp.zeros(batch, jnp.int32),
-        pushes=jnp.zeros(batch, jnp.int32),
-        relabels=jnp.zeros(batch, jnp.int32),
-    )
+    Orchestration lives in ``repro.core.solver_loop.run_masked``: each
+    instance runs its own flattened ε-scaling schedule (``_ScaleState``) and
+    is frozen via selects once its schedule finishes, while the rest of the
+    batch keeps refining.
+    """
+    state = _scale_init(w, alpha=alpha)
+    spec = _assignment_spec(method, alpha, max_rounds, rounds_per_heuristic,
+                            use_price_update, use_arc_fixing, backend)
+    state, _ = run_masked(spec, state, state.eps.shape)
+    return _assignment_finalize(w, state.st)
 
-    refine_kw = dict(method=method, max_rounds=max_rounds,
-                     rounds_per_heuristic=rounds_per_heuristic,
-                     use_price_update=use_price_update,
-                     use_arc_fixing=use_arc_fixing, backend=backend)
 
-    # ε-scaling: eps <- C, then eps <- ceil(eps/alpha) down to 1 (Alg. 5.0).
-    # eps is per-instance; an instance whose schedule hit its eps=1 pass is
-    # carried at eps=0 (dead) and its state frozen while the rest scale down.
-    def body(carry):
-        eps, st = carry
-        live = eps >= 1
-        eps_run = jnp.maximum(1, -(-eps // alpha))  # eps <- eps/alpha
-        st = _freeze(live, _refine(c, eps_run, st, live=live, **refine_kw),
-                     st)
-        next_eps = jnp.where(live & (eps_run > 1), eps_run, 0)
-        return next_eps, st
+_scale_init_jit = jax.jit(_scale_init, static_argnames=("alpha",))
+_assignment_finalize_jit = jax.jit(_assignment_finalize)
 
-    def cond(carry):
-        return jnp.any(carry[0] >= 1)
 
-    _, st = jax.lax.while_loop(cond, body, (C, st))
+def _solve_assignment_compact(
+    w: jax.Array,
+    *,
+    lanes=None,
+    method: str,
+    alpha: int,
+    max_rounds: int,
+    rounds_per_heuristic: int,
+    use_price_update: bool,
+    use_arc_fixing: bool,
+    backend: str,
+) -> AssignmentResult:
+    """Batched solve with early-exit compaction on the (B,) axis.
 
-    # Unmatched rows (all-zero F row — possible only when max_rounds was hit
-    # before a perfect matching) get the sentinel n, so callers can always
-    # detect them; matched rows get their argmax column as before.
-    matched = jnp.sum(st.F, axis=-1) > 0
-    col = jnp.where(matched, jnp.argmax(st.F, axis=-1), n)
-    weight = jnp.sum(jnp.where(matched, jnp.take_along_axis(
-        w_i, jnp.minimum(col, n - 1)[..., :, None], axis=-1)[..., 0], 0),
-        axis=-1)
-    return AssignmentResult(
-        col_of_row=col, weight=weight, p_x=st.p_x, p_y=st.p_y,
-        rounds=st.rounds, pushes=st.pushes, relabels=st.relabels,
-        converged=_is_perfect(st.F),
-    )
+    ``run_compacted`` drives the host loop: instances whose ε schedule
+    finished are dropped from the working set — still-live ones are
+    gathered into dense pow2-sized sub-batches between jitted cycle
+    segments — instead of being select-masked until the whole batch drains.
+    Results bit-match the masked path (tests/test_compact.py).
+    """
+    state = _scale_init_jit(jnp.asarray(w, jnp.int32), alpha=alpha)
+    spec = _assignment_spec(method, alpha, max_rounds, rounds_per_heuristic,
+                            use_price_update, use_arc_fixing, backend)
+    state, _ = run_compacted(spec, state, w.shape[0], lanes=lanes)
+    return _assignment_finalize_jit(jnp.asarray(w, jnp.int32), state.st)
 
 
 def solve_assignment(
@@ -399,6 +471,7 @@ def solve_assignment(
     use_price_update: bool = True,
     use_arc_fixing: bool = True,
     backend: str = "xla",
+    compact: bool = False,
     mesh=None,
     mesh_axis: str | None = None,
 ) -> AssignmentResult:
@@ -424,6 +497,14 @@ def solve_assignment(
         (paper §5.2).
       backend: ``"xla"`` or ``"pallas"`` (the bidding/min stage as a TPU
         kernel).
+      compact: early-exit compaction (``repro.core.solver_loop``; batched
+        ``(B, n, n)`` weights only). Instances whose ε schedule finished
+        are dropped from the working set between jitted cycle segments —
+        still-live instances are gathered into dense pow2-sized
+        sub-batches — instead of being select-masked until the whole batch
+        drains. Worth it when convergence is ragged across the batch. With
+        ``mesh=``, compaction stays within each shard (one host lane per
+        device, no collectives).
       mesh: optional ``jax.sharding.Mesh``
         (``repro.launch.mesh.make_solver_mesh``). Requires batched ``w``
         ``(B, n, n)`` with ``B`` divisible by the shard count; the batch
@@ -451,6 +532,17 @@ def solve_assignment(
               rounds_per_heuristic=rounds_per_heuristic,
               use_price_update=use_price_update,
               use_arc_fixing=use_arc_fixing, backend=backend)
+    if compact:
+        if w.ndim != 3:
+            raise ValueError(
+                f"compact=True needs batched (B, n, n) weights, got shape "
+                f"{w.shape}; compaction drops converged instances from a "
+                f"batch axis")
+        lanes = None
+        if mesh is not None:
+            from repro.launch.mesh import compact_lanes
+            lanes = compact_lanes(mesh, mesh_axis, w.shape[0])
+        return _solve_assignment_compact(w, lanes=lanes, **kw)
     if mesh is None:
         return _solve_assignment_impl(w, **kw)
     if w.ndim != 3:

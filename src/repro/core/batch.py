@@ -120,6 +120,7 @@ def solve_maxflow_batch(
     *,
     bucket: str = "max",
     backend: str = "xla",
+    compact: bool = False,
     mesh=None,
     mesh_axis: str | None = None,
     **solver_kw,
@@ -133,9 +134,15 @@ def solve_maxflow_batch(
         trade-off.
       backend: solver round implementation (``"xla"`` | ``"multipush"`` |
         ``"pallas"``), forwarded to ``maxflow_grid_batch``.
+      compact: early-exit compaction per bucket — converged instances are
+        dropped from the working set between jitted cycle segments instead
+        of being select-masked until the bucket's slowest instance finishes
+        (``repro.core.solver_loop``; results bit-match, see
+        docs/batching.md).
       mesh / mesh_axis: optional device mesh — each bucket's batch axis is
         sharded across it, with inert zero-capacity instances appended so
-        every bucket splits evenly (dropped before returning).
+        every bucket splits evenly (dropped before returning). With
+        ``compact=True``, compaction runs within each shard's lane.
       **solver_kw: forwarded to ``maxflow_grid_batch`` (e.g. ``max_rounds``).
 
     Returns one ``GridFlowResult`` per instance in input order, with ``cut``
@@ -157,8 +164,8 @@ def solve_maxflow_batch(
         padded += [inert_grid_problem(H, W)] * _shard_pad(
             len(idxs), mesh, mesh_axis)
         stacked = stack_grid_problems(padded)
-        res = maxflow_grid_batch(stacked, backend=backend, mesh=mesh,
-                                 mesh_axis=mesh_axis, **solver_kw)
+        res = maxflow_grid_batch(stacked, backend=backend, compact=compact,
+                                 mesh=mesh, mesh_axis=mesh_axis, **solver_kw)
         for b, i in enumerate(idxs):
             h, w = shapes[i]
             st = res.state
@@ -208,6 +215,7 @@ def solve_assignment_batch(
     costs: Sequence,
     *,
     bucket: str = "max",
+    compact: bool = False,
     mesh=None,
     mesh_axis: str | None = None,
     **solver_kw,
@@ -218,9 +226,14 @@ def solve_assignment_batch(
       costs: sequence of square integer weight matrices (ragged ``n`` fine).
       bucket: ``"max"`` | ``"pow2"`` | ``"exact"`` bucketing of the matrix
         sizes — see docs/batching.md.
+      compact: early-exit compaction per bucket — instances whose ε
+        schedule finished are dropped from the working set between jitted
+        cycle segments (``repro.core.solver_loop``; results bit-match the
+        masked path, see docs/batching.md).
       mesh / mesh_axis: optional device mesh — each bucket's batch axis is
         sharded across it, with inert zero-weight matrices appended so every
-        bucket splits evenly (dropped before returning).
+        bucket splits evenly (dropped before returning). With
+        ``compact=True``, compaction runs within each shard's lane.
       **solver_kw: forwarded to ``solve_assignment`` (``method=``,
         ``max_rounds=``, ``backend=``, ...).
 
@@ -256,8 +269,8 @@ def solve_assignment_batch(
         mats += [jnp.zeros((m, m), jnp.int32)] * _shard_pad(
             len(idxs), mesh, mesh_axis)
         stacked = jnp.stack(mats)
-        res = solve_assignment(stacked, mesh=mesh, mesh_axis=mesh_axis,
-                               **solver_kw)
+        res = solve_assignment(stacked, compact=compact, mesh=mesh,
+                               mesh_axis=mesh_axis, **solver_kw)
         for b, i in enumerate(idxs):
             n = sizes[i]
             col = res.col_of_row[b, :n]

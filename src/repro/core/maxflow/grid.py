@@ -28,7 +28,10 @@ carry leading batch dimensions — ``e``: ``(..., H, W)``, ``cap``:
 ``maxflow_grid`` solves one instance; ``maxflow_grid_batch`` solves a stack of
 same-shape instances in ONE jitted dispatch, with per-instance convergence
 masks so converged instances become no-ops instead of blocking the batch
-(see ``repro.core.batch`` for the pad-and-bucket front end).
+(see ``repro.core.batch`` for the pad-and-bucket front end). Outer
+orchestration is delegated to ``repro.core.solver_loop``: masked iteration
+by default, early-exit compaction — converged instances leave the working
+set between cycles — under ``compact=True``.
 """
 from __future__ import annotations
 
@@ -37,6 +40,8 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.solver_loop import LoopSpec, run_compacted, run_masked
 
 UP, DOWN, LEFT, RIGHT = 0, 1, 2, 3
 _OPP = (DOWN, UP, RIGHT, LEFT)
@@ -272,38 +277,54 @@ def _round_fn(backend: str):
     return jacobi_round
 
 
-def _select_state(live: jax.Array, new: GridFlowState,
-                  old: GridFlowState) -> GridFlowState:
-    """Per-instance freeze: keep ``old`` leaves where ``live`` is False.
+@functools.lru_cache(maxsize=None)
+def _grid_spec(rounds_per_heuristic: int, max_rounds: int,
+               bfs_max_iters: int, backend: str) -> LoopSpec:
+    """The grid solver's registration with the solver-loop runtime.
 
-    ``live`` has the batch shape (``()`` or ``(B,)``); leaves are
-    ``(..., H, W)`` planes, ``(4, ..., H, W)`` for ``cap`` (direction axis
-    leads the batch axes), or ``(...,)`` flow totals.
+    Cached per static-knob tuple so repeated solves hand the runtime the
+    SAME spec object and the compacted drivers' jitted cycles cache-hit.
+    The cycle is shape-polymorphic: ``n_nodes`` and the BFS cap derive from
+    the state's trailing (H, W), so one spec serves every grid size and
+    every compaction sub-batch size.
     """
-    from repro.core.masking import freeze
-    # the only leaf with an axis before the batch axes is cap (4, ..., H, W)
-    return freeze(live, new, old,
-                  lead_axes_fn=lambda a: 1 if a.ndim - live.ndim == 3 else 0)
+    round_fn = _round_fn(backend)
+
+    def cycle(state: GridFlowState) -> GridFlowState:
+        H, W = state.e.shape[-2:]
+        n_nodes = jnp.int32(H * W + 2)
+        iters = bfs_max_iters or (H * W + 2)
+
+        def inner(_, s):
+            return round_fn(s, n_nodes)
+
+        new = jax.lax.fori_loop(0, rounds_per_heuristic, inner, state)
+        return new._replace(
+            h=bfs_heights(new.cap, new.cap_sink, new.h, n_nodes, iters))
+
+    def live(state: GridFlowState, rounds: jax.Array) -> jax.Array:
+        return jnp.any(state.e > 0, axis=(-2, -1)) & (rounds < max_rounds)
+
+    def lead_axes(a, batch_ndim: int) -> int:
+        # the only leaf with an axis before the batch axes is cap
+        # (4, ..., H, W) — the direction axis leads
+        return 1 if a.ndim - batch_ndim == 3 else 0
+
+    return LoopSpec(cycle=cycle, live=live,
+                    rounds_per_cycle=rounds_per_heuristic,
+                    lead_axes_fn=lead_axes)
 
 
-def _solve_grid(cap0, cs0, ct0, *, rounds_per_heuristic, max_rounds,
-                bfs_max_iters, backend) -> GridFlowResult:
-    """Shared solver loop, rank-polymorphic over leading batch axes.
+def _grid_init(cap0, cs0, ct0, *, bfs_max_iters: int) -> GridFlowState:
+    """Paper Alg. 4.7 init: saturate s->x, heights from a round-0 BFS.
 
-    ``cs0``/``ct0`` are ``(..., H, W)`` with ``cap0`` ``(4, ..., H, W)``.
-    The loop predicate is a per-instance liveness mask (batch shape ``(...,)``,
-    scalar for a single instance): every outer iteration advances only the
-    instances that still hold excess and are under ``max_rounds``; the rest
-    are frozen via selects. With no batch axes the mask is the scalar
-    predicate of the original single-instance loop (the select is the
-    identity while it runs), so both entry points share one trajectory.
+    Internal layout — ``cs0``/``ct0`` ``(..., H, W)``, ``cap0``
+    ``(4, ..., H, W)``.
     """
     *b, H, W = cs0.shape
     bshape = tuple(b)
     n_nodes = jnp.int32(H * W + 2)
     bfs_iters = bfs_max_iters or (H * W + 2)
-
-    # Paper Alg. 4.7 init: saturate s->x, heights 0, excess = u(s, x).
     state = GridFlowState(
         e=cs0.astype(jnp.float32),
         h=jnp.zeros(bshape + (H, W), jnp.int32),
@@ -314,44 +335,73 @@ def _solve_grid(cap0, cs0, ct0, *, rounds_per_heuristic, max_rounds,
         src_flow=jnp.zeros(bshape, jnp.float32),
     )
     # Start from BFS-consistent heights (global relabel at round 0).
-    state = state._replace(
+    return state._replace(
         h=bfs_heights(state.cap, state.cap_sink, state.h, n_nodes, bfs_iters))
 
-    round_fn = _round_fn(backend)
 
-    def live_of(state, rounds):
-        return jnp.any(state.e > 0, axis=(-2, -1)) & (rounds < max_rounds)
+def _grid_finalize(state: GridFlowState, rounds, *,
+                   bfs_max_iters: int) -> GridFlowResult:
+    """Min cut + convergence flags from a finished (internal-layout) state.
 
-    def outer_cond(carry):
-        state, rounds = carry
-        return jnp.any(live_of(state, rounds))
-
-    def outer_body(carry):
-        state, rounds = carry
-        live = live_of(state, rounds)
-
-        def inner(_, s):
-            return round_fn(s, n_nodes)
-
-        new = jax.lax.fori_loop(0, rounds_per_heuristic, inner, state)
-        new = new._replace(
-            h=bfs_heights(new.cap, new.cap_sink, new.h, n_nodes, bfs_iters))
-        state = _select_state(live, new, state)
-        return state, rounds + jnp.where(live, rounds_per_heuristic, 0)
-
-    state, rounds = jax.lax.while_loop(
-        outer_cond, outer_body, (state, jnp.zeros(bshape, jnp.int32)))
-
-    # Min cut: sink side = nodes that still reach t in the residual graph.
+    Sink side of the cut = nodes that still reach t in the residual graph.
+    """
+    H, W = state.e.shape[-2:]
+    n_nodes = jnp.int32(H * W + 2)
+    bfs_iters = bfs_max_iters or (H * W + 2)
     h_bfs = bfs_heights(state.cap, state.cap_sink, state.h, n_nodes, bfs_iters)
-    cut = h_bfs < n_nodes
     return GridFlowResult(
         flow=state.sink_flow,
-        cut=cut,
+        cut=h_bfs < n_nodes,
         state=state,
         rounds=rounds,
         converged=~jnp.any(state.e > 0, axis=(-2, -1)),
     )
+
+
+def _solve_grid(cap0, cs0, ct0, *, rounds_per_heuristic, max_rounds,
+                bfs_max_iters, backend) -> GridFlowResult:
+    """Shared masked solver loop, rank-polymorphic over leading batch axes.
+
+    ``cs0``/``ct0`` are ``(..., H, W)`` with ``cap0`` ``(4, ..., H, W)``.
+    Orchestration lives in ``repro.core.solver_loop.run_masked``: the loop
+    predicate is a per-instance liveness mask (batch shape ``(...,)``,
+    scalar for a single instance) and converged instances are frozen via
+    selects. With no batch axes the mask is the scalar predicate of the
+    original single-instance loop, so both entry points share one
+    trajectory.
+    """
+    state = _grid_init(cap0, cs0, ct0, bfs_max_iters=bfs_max_iters)
+    spec = _grid_spec(rounds_per_heuristic, max_rounds, bfs_max_iters,
+                      backend)
+    state, rounds = run_masked(spec, state, cs0.shape[:-2])
+    return _grid_finalize(state, rounds, bfs_max_iters=bfs_max_iters)
+
+
+_grid_init_jit = jax.jit(_grid_init, static_argnames=("bfs_max_iters",))
+_grid_finalize_jit = jax.jit(_grid_finalize,
+                             static_argnames=("bfs_max_iters",))
+
+
+def _grid_batch_compact(cap0, cs0, ct0, *, rounds_per_heuristic, max_rounds,
+                        bfs_max_iters, backend, lanes=None) -> GridFlowResult:
+    """Batched solve with early-exit compaction (public (B, ...) layout).
+
+    ``run_compacted`` drives the host loop: still-live instances are
+    gathered into dense pow2-sized sub-batches between jitted cycle
+    segments, so converged instances stop consuming FLOPs instead of being
+    select-masked until the whole batch drains. Results bit-match the
+    masked path (tests/test_compact.py).
+    """
+    state = _grid_init_jit(jnp.moveaxis(jnp.asarray(cap0), 1, 0),
+                           jnp.asarray(cs0), jnp.asarray(ct0),
+                           bfs_max_iters=bfs_max_iters)
+    spec = _grid_spec(rounds_per_heuristic, max_rounds, bfs_max_iters,
+                      backend)
+    state, rounds = run_compacted(spec, state, cs0.shape[0], lanes=lanes)
+    res = _grid_finalize_jit(state, rounds, bfs_max_iters=bfs_max_iters)
+    # public layout: batch axis leads everywhere, including state.cap
+    return res._replace(
+        state=res.state._replace(cap=jnp.moveaxis(res.state.cap, 0, 1)))
 
 
 @functools.partial(
@@ -432,6 +482,7 @@ def maxflow_grid_batch(
     max_rounds: int = 100_000,
     bfs_max_iters: int = 0,
     backend: str = "xla",
+    compact: bool = False,
     mesh=None,
     mesh_axis: str | None = None,
 ) -> GridFlowResult:
@@ -443,6 +494,15 @@ def maxflow_grid_batch(
         ``cap_src``/``cap_sink`` ``(B, H, W)``.
       rounds_per_heuristic / max_rounds / bfs_max_iters / backend: as in
         ``maxflow_grid`` (applied per instance).
+      compact: early-exit compaction (``repro.core.solver_loop``). Instead
+        of one jitted dispatch whose converged instances are select-masked
+        until the whole batch drains, a host-driven loop gathers still-live
+        instances into dense pow2-sized sub-batches between jitted cycle
+        segments, so a converged instance stops consuming FLOPs. Worth it
+        when convergence is ragged (stragglers dominate); the masked
+        single-dispatch path wins when all instances finish together. With
+        ``mesh=``, compaction stays WITHIN each shard (one host lane per
+        device, no collectives — ``repro.launch.mesh.compact_lanes``).
       mesh: optional ``jax.sharding.Mesh`` (see
         ``repro.launch.mesh.make_solver_mesh``). When given, the batch axis
         is partitioned across the mesh under ``shard_map``: each device
@@ -460,12 +520,14 @@ def maxflow_grid_batch(
       ``flow``/``rounds``/``converged`` are ``(B,)``, ``cut`` is
       ``(B, H, W)``, and ``state.cap`` is returned as ``(B, 4, H, W)``.
 
-    Bit-match contract: runs the SAME shared loop as ``maxflow_grid`` with
-    batch shape ``(B,)`` — per-instance liveness masks freeze converged
-    instances, so results bit-match a loop of solo ``maxflow_grid`` runs,
-    and the sharded path bit-matches the unsharded one (an instance's
-    trajectory never depends on its batch-mates; tests/test_batch.py,
-    tests/test_shard.py).
+    Bit-match contract: runs the SAME shared cycle as ``maxflow_grid`` with
+    batch shape ``(B,)`` — per-instance liveness masks (masked mode) or
+    live-set gathers (compacted mode) advance exactly the instances still
+    running, so results bit-match a loop of solo ``maxflow_grid`` runs,
+    the sharded path bit-matches the unsharded one, and ``compact=True``
+    bit-matches ``compact=False`` (an instance's trajectory never depends
+    on its batch-mates; tests/test_batch.py, tests/test_shard.py,
+    tests/test_compact.py).
     """
     cap0, cs0, ct0 = problem
     if cap0.ndim != 4 or cap0.shape[1] != 4 or cs0.ndim != 3:
@@ -475,6 +537,12 @@ def maxflow_grid_batch(
     kw = dict(rounds_per_heuristic=rounds_per_heuristic,
               max_rounds=max_rounds, bfs_max_iters=bfs_max_iters,
               backend=backend)
+    if compact:
+        lanes = None
+        if mesh is not None:
+            from repro.launch.mesh import compact_lanes
+            lanes = compact_lanes(mesh, mesh_axis, cs0.shape[0])
+        return _grid_batch_compact(cap0, cs0, ct0, lanes=lanes, **kw)
     if mesh is None:
         return _grid_batch_impl(cap0, cs0, ct0, **kw)
     from repro.launch.mesh import dispatch_sharded

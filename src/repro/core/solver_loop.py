@@ -1,0 +1,221 @@
+"""Unified solver-loop runtime: masked iteration + early-exit compaction.
+
+Both paper solvers share one outer orchestration — a per-instance-masked
+while-loop over "heuristic cycles" (a fixed number of Jacobi rounds plus a
+vectorized heuristic pass).  A solver registers the pieces as a ``LoopSpec``:
+
+* ``cycle(state) -> state`` — one heuristic cycle, batch-polymorphic and
+  PER-INSTANCE PURE: instance ``b`` of the output depends only on instance
+  ``b`` of the input (every reduction runs over trailing data axes; shared
+  while-loop predicates inside, like a BFS fixpoint's ``changed``, may add
+  no-op iterations but never change an instance's values),
+* ``live(state, rounds) -> (...,) bool`` — the per-instance liveness mask,
+* ``rounds_per_cycle`` — the per-instance round-accounting increment,
+* ``lead_axes_fn(leaf, batch_ndim) -> int`` — how many leaf axes PRECEDE
+  the batch axes (the freeze/gather/scatter spec; ``None`` = batch leads
+  every leaf).
+
+and the runtime owns the iteration in one of two modes:
+
+* ``run_masked`` — the jittable baseline: every cycle computes the whole
+  batch and ``freeze`` selects the old state back in for non-live
+  instances.  A converged instance is an exact no-op — but still pays full
+  FLOPs every cycle until the whole batch finishes.
+* ``run_compacted`` — early-exit compaction (the ROADMAP item; cf. the
+  active-set compaction of workload-balanced GPU push-relabel): a
+  host-driven loop gathers still-live instances into dense pow2-sized
+  sub-batches (fixed bucket sizes bound recompiles to <= log2(B) + 2 per
+  solver config), runs the SAME jitted cycle on the compacted sub-batch,
+  and scatters results back in input order.  Converged instances stop
+  consuming FLOPs entirely instead of being select-masked forever.
+
+Because cycles are per-instance pure, both modes execute the identical
+per-instance trajectory: compacted results bit-match masked results, which
+bit-match a loop of single-instance solves (tests/test_compact.py).
+
+Sharding: ``run_compacted`` accepts per-shard LANES — contiguous batch
+slices pinned to devices (``repro.launch.mesh.compact_lanes``).  Compaction
+then happens within each lane only: instances never migrate between shards
+and no collectives are introduced, preserving the shard-independence
+contract of the mesh path.  Lane dispatches are issued before any liveness
+mask is fetched, so devices run their cycles concurrently.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.masking import freeze
+
+
+class LoopSpec(NamedTuple):
+    """A solver's registration with the loop runtime.
+
+    Build specs through a cached factory (``functools.lru_cache`` keyed by
+    the solver's static knobs) so repeated solves hand the runtime the SAME
+    spec object — the jitted drivers use the spec as a static argument and
+    cache compiled cycles per (spec, sub-batch shape).
+    """
+
+    cycle: Callable        # state -> state, one heuristic cycle (all-live)
+    live: Callable         # (state, rounds) -> (...,) bool per instance
+    rounds_per_cycle: int
+    lead_axes_fn: Callable | None = None   # (leaf, batch_ndim) -> int
+
+
+def _lead(spec: LoopSpec, batch_ndim: int):
+    """Adapt the spec's (leaf, batch_ndim) signature to a (leaf,) closure."""
+    if spec.lead_axes_fn is None:
+        return None
+    fn = spec.lead_axes_fn
+    return lambda a: fn(a, batch_ndim)
+
+
+def run_masked(spec: LoopSpec, state, batch_shape: tuple):
+    """Masked iteration: cycle the whole batch, freeze non-live instances.
+
+    Jittable (it is the body both jitted solver entry points trace).  With
+    ``batch_shape == ()`` the mask is the scalar predicate of a
+    single-instance loop — the freeze select is the identity while it runs —
+    so single and batched solves share one trajectory.
+
+    Returns ``(state, rounds)`` where ``rounds`` counts, per instance, the
+    Jacobi rounds executed while that instance was live.
+    """
+    lead = _lead(spec, len(batch_shape))
+
+    def cond(carry):
+        s, r = carry
+        return jnp.any(spec.live(s, r))
+
+    def body(carry):
+        s, r = carry
+        lv = spec.live(s, r)
+        s = freeze(lv, spec.cycle(s), s, lead_axes_fn=lead)
+        return s, r + jnp.where(lv, spec.rounds_per_cycle, 0)
+
+    return jax.lax.while_loop(
+        cond, body, (state, jnp.zeros(batch_shape, jnp.int32)))
+
+
+def bucket_size(n_live: int, cap: int) -> int:
+    """Sub-batch size for ``n_live`` instances: next pow2, clamped to the
+    lane size.  The fixed bucket ladder {1, 2, 4, ..., cap} bounds the
+    number of distinct compiled cycle shapes to <= log2(cap) + 2."""
+    p = 1 << max(0, n_live - 1).bit_length() if n_live > 1 else 1
+    return min(p, cap)
+
+
+def _tree_take(spec: LoopSpec, state, idx, batch_ndim: int = 1):
+    """Gather instances ``idx`` from every leaf's batch axis."""
+    lead = _lead(spec, batch_ndim)
+
+    def take(a):
+        return jnp.take(a, idx, axis=lead(a) if lead else 0)
+
+    return jax.tree.map(take, state)
+
+
+def _tree_put(spec: LoopSpec, state, idx, sub):
+    """Scatter sub-batch ``sub`` back into ``state`` at instances ``idx``."""
+    lead = _lead(spec, 1)
+
+    def put(a, s):
+        ax = lead(a) if lead else 0
+        return a.at[(slice(None),) * ax + (idx,)].set(s)
+
+    return jax.tree.map(put, state, sub)
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _compact_step(spec: LoopSpec, state, rounds):
+    """One cycle on an (all-live) compacted sub-batch + its next liveness."""
+    new = spec.cycle(state)
+    return new, spec.live(new, rounds + spec.rounds_per_cycle)
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _live_mask(spec: LoopSpec, state, rounds):
+    return spec.live(state, rounds)
+
+
+def run_compacted(spec: LoopSpec, state, n_instances: int, *, lanes=None):
+    """Early-exit compaction over a 1-D batch axis of ``n_instances``.
+
+    Between jitted cycle segments the host gathers still-live instances
+    into a dense pow2-sized sub-batch (``bucket_size``), runs ``cycle`` on
+    it, and scatters the results back in input order.  Pad slots of a
+    bucket duplicate a live instance and are discarded on scatter — cycles
+    are per-instance pure, so duplicates cannot perturb real slots.
+
+    Args:
+      spec: the solver's ``LoopSpec`` (from a cached factory).
+      state: batched solver state; every leaf's batch axis has size
+        ``n_instances`` at position ``lead_axes_fn(leaf, 1)``.
+      n_instances: the batch size B.
+      lanes: optional list of ``(lo, hi, device)`` contiguous slices (from
+        ``repro.launch.mesh.compact_lanes``).  Each lane compacts
+        independently on its device; instances never cross lanes.  Default:
+        one lane covering the whole batch on the default device.
+
+    Returns ``(state, rounds)`` — same contract as ``run_masked``; results
+    bit-match it (tests/test_compact.py).
+    """
+    if lanes is None:
+        lanes = [(0, n_instances, None)]
+    rounds = np.zeros(n_instances, np.int32)
+
+    # Split into per-lane states (pinned to the lane's device, if any) and
+    # evaluate initial liveness; fetch masks only after every lane has
+    # dispatched so devices start concurrently.
+    lane_states, masks, live_idx = [], [], []
+    for lo, hi, dev in lanes:
+        sub = _tree_take(spec, state, jnp.arange(lo, hi))
+        if dev is not None:
+            sub = jax.device_put(sub, dev)
+        lane_states.append(sub)
+        masks.append(_live_mask(spec, sub, jnp.zeros(hi - lo, jnp.int32)))
+    for m in masks:
+        live_idx.append(np.nonzero(np.asarray(m))[0])
+
+    while any(li.size for li in live_idx):
+        pending: list = [None] * len(lanes)
+        for i, (lo, hi, dev) in enumerate(lanes):
+            li = live_idx[i]
+            if not li.size:
+                continue
+            m = bucket_size(int(li.size), hi - lo)
+            pad = np.concatenate(
+                [li, np.full(m - li.size, li[0], dtype=li.dtype)])
+            sub = _tree_take(spec, lane_states[i], jnp.asarray(pad))
+            new_sub, lv = _compact_step(
+                spec, sub, jnp.asarray(rounds[lo:hi][pad]))
+            # scatter ONLY the real slots: pad duplicates must not overwrite
+            # their source instance with an extra-cycled value
+            keep = _tree_take(spec, new_sub, jnp.arange(li.size))
+            lane_states[i] = _tree_put(spec, lane_states[i],
+                                       jnp.asarray(li), keep)
+            pending[i] = lv
+        for i, lv in enumerate(pending):   # host sync point, all lanes in
+            if lv is None:
+                continue
+            li = live_idx[i]
+            rounds[lanes[i][0] + li] += spec.rounds_per_cycle
+            live_idx[i] = li[np.asarray(lv)[:li.size]]
+
+    # Reassemble in input order (lanes are contiguous, ordered slices).
+    if len(lane_states) > 1:
+        home = jax.devices()[0]
+        parts = [jax.device_put(s, home) if dev is not None else s
+                 for (_, _, dev), s in zip(lanes, lane_states)]
+        lead = _lead(spec, 1)
+        state = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=lead(xs[0]) if lead else 0),
+            *parts)
+    else:
+        state = lane_states[0]
+    return state, jnp.asarray(rounds)

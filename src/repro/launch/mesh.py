@@ -19,6 +19,10 @@ wrapped solvers contain no collectives, each device runs its local shard's
 while-loops to local convergence — a fully-converged shard simply finishes
 its dispatch early. Results bit-match the unsharded batched solve
 (tests/test_shard.py).
+
+``compact_lanes`` is the compaction analogue: it splits the batch into
+per-shard host-driven lanes (one per device) for the solvers' ``compact=``
+paths, keeping early-exit compaction within each shard (tests/test_compact.py).
 """
 from __future__ import annotations
 
@@ -88,6 +92,32 @@ def batch_spec(mesh, mesh_axis: str | None = None) -> PartitionSpec:
     leads with the batch axis.
     """
     return PartitionSpec(solver_batch_axis(mesh, mesh_axis))
+
+
+def compact_lanes(mesh, mesh_axis: str | None, batch_size: int):
+    """Per-shard ``(lo, hi, device)`` lanes for compacted solving on ``mesh``.
+
+    Early-exit compaction (``repro.core.solver_loop.run_compacted``) under a
+    mesh stays WITHIN each shard: every shard becomes an independent
+    host-driven compaction lane pinned to its device, instances never
+    migrate between shards, and no collectives are introduced — so the
+    shard-independence contract (and the bit-match with the unsharded and
+    masked paths) is preserved. Requires one device per shard, i.e. the 1-D
+    solver meshes of ``make_solver_mesh``.
+    """
+    n = shard_count(mesh, mesh_axis)
+    if batch_size % n:
+        raise ValueError(
+            f"batch size {batch_size} not divisible by shard count "
+            f"{n}; pad the batch (repro.core.batch does this "
+            f"automatically)")
+    if int(mesh.devices.size) != n:
+        raise ValueError(
+            f"compact=True needs one device per shard (a 1-D solver mesh); "
+            f"this mesh has {int(mesh.devices.size)} devices for {n} shards")
+    per = batch_size // n
+    devs = list(mesh.devices.reshape(-1))
+    return [(i * per, (i + 1) * per, devs[i]) for i in range(n)]
 
 
 def shard_batched(fn: Callable, mesh, mesh_axis: str | None = None):

@@ -82,14 +82,23 @@ class SolverEngine:
         inert instances automatically.
       bucket: bucketing policy for ragged queues (``"max"`` | ``"pow2"`` |
         ``"exact"``, see docs/batching.md).
+      compact: early-exit compaction of each bucket's batch (the
+        ``compact=`` knob of ``repro.core.batch`` / the solvers): requests
+        that converge early are dropped from the working set between cycle
+        segments instead of being select-masked until the bucket's slowest
+        request finishes. Off by default; worth opting into for serving
+        queues, whose convergence is naturally ragged (see
+        benchmarks/RESULTS_compaction.md). Results stay bit-identical.
       maxflow_kw / assignment_kw: per-kind solver keyword overrides
         (``backend=``, ``method=``, ``max_rounds=``, ...).
     """
 
     def __init__(self, *, mesh=None, mesh_axis: str | None = None,
-                 bucket: str = "max", maxflow_kw: dict | None = None,
+                 bucket: str = "max", compact: bool = False,
+                 maxflow_kw: dict | None = None,
                  assignment_kw: dict | None = None):
         self.mesh, self.mesh_axis, self.bucket = mesh, mesh_axis, bucket
+        self.compact = compact
         self.maxflow_kw = dict(maxflow_kw or {})
         self.assignment_kw = dict(assignment_kw or {})
         self._next_ticket = 0
@@ -148,14 +157,15 @@ class SolverEngine:
         if self._maxflow:
             tickets, probs = zip(*self._maxflow)
             res = solve_maxflow_batch(
-                list(probs), bucket=self.bucket, mesh=self.mesh,
-                mesh_axis=self.mesh_axis, **self.maxflow_kw)
+                list(probs), bucket=self.bucket, compact=self.compact,
+                mesh=self.mesh, mesh_axis=self.mesh_axis, **self.maxflow_kw)
             out.update(zip(tickets, res))
         if self._assignment:
             tickets, ws = zip(*self._assignment)
             res = solve_assignment_batch(
-                list(ws), bucket=self.bucket, mesh=self.mesh,
-                mesh_axis=self.mesh_axis, **self.assignment_kw)
+                list(ws), bucket=self.bucket, compact=self.compact,
+                mesh=self.mesh, mesh_axis=self.mesh_axis,
+                **self.assignment_kw)
             out.update(zip(tickets, res))
         # clear only after BOTH kinds solved: a raise above (e.g. a malformed
         # request) leaves the queues intact so no ticket is silently dropped

@@ -13,9 +13,9 @@ import pytest
 
 from repro.core.assignment.cost_scaling import solve_assignment
 from repro.core.assignment.ref import optimal_weight
-from repro.core.batch import (pad_cost_matrix, pad_grid_problem,
-                              solve_assignment_batch, solve_maxflow_batch,
-                              stack_grid_problems)
+from repro.core.batch import (inert_grid_problem, pad_cost_matrix,
+                              pad_grid_problem, solve_assignment_batch,
+                              solve_maxflow_batch, stack_grid_problems)
 from repro.core.maxflow.grid import (GridProblem, check_no_violations,
                                      maxflow_grid, maxflow_grid_batch)
 from repro.core.maxflow.ref import maxflow_grid_ref, random_grid_problem
@@ -170,6 +170,81 @@ def test_batch_empty_inputs():
     """An empty request queue is a no-op, not a crash."""
     assert solve_maxflow_batch([]) == []
     assert solve_assignment_batch([]) == []
+
+
+def test_b1_buckets_match_direct_solves():
+    """A B=1 bucket (one instance per distinct shape, bucket="exact") is
+    just the direct solve: same flow/cut and same matching/weight."""
+    rng = np.random.default_rng(20)
+    p = GridProblem(*map(jnp.asarray, random_grid_problem(rng, 6, 4)))
+    [r] = solve_maxflow_batch([p], bucket="exact")
+    rs = maxflow_grid(p)
+    assert float(r.flow) == float(rs.flow)
+    np.testing.assert_array_equal(np.asarray(r.cut), np.asarray(rs.cut))
+    assert int(r.rounds) == int(rs.rounds)
+
+    w = rng.integers(-9, 40, (5, 5))
+    [ra] = solve_assignment_batch([w], bucket="exact")
+    assert int(ra.weight) == optimal_weight(w)
+    assert sorted(np.asarray(ra.col_of_row).tolist()) == list(range(5))
+
+
+def test_all_inert_bucket_converges_trivially():
+    """A bucket padded ENTIRELY with inert instances (the degenerate shard
+    padding case) converges with zero flow, zero rounds, and an all
+    sink-free cut — no pushes, no relabels, no wedged loop."""
+    batch = stack_grid_problems([inert_grid_problem(5, 7)] * 4)
+    res = maxflow_grid_batch(batch)
+    assert bool(jnp.all(res.converged))
+    np.testing.assert_array_equal(np.asarray(res.rounds), np.zeros(4))
+    np.testing.assert_array_equal(np.asarray(res.flow), np.zeros(4))
+    assert not bool(jnp.any(res.cut))      # nothing reaches the sink
+
+    # the assignment analogue: zero-weight matrices (any perfect matching
+    # optimal) — the inert shard-padding instances of the ragged front end
+    zero = solve_assignment(jnp.zeros((3, 4, 4), jnp.int32))
+    assert bool(jnp.all(zero.converged))
+    np.testing.assert_array_equal(np.asarray(zero.weight), np.zeros(3))
+
+
+def test_pad_grid_problem_non_square_values():
+    """Non-square pads: original block preserved exactly, padding
+    zero-capacity (inert), and the padded solve keeps the original's flow
+    and cut window."""
+    rng = np.random.default_rng(21)
+    p = GridProblem(*map(jnp.asarray, random_grid_problem(rng, 3, 7)))
+    q = pad_grid_problem(p, 8, 9)
+    assert q.cap_src.shape == (8, 9) and q.cap_nbr.shape == (4, 8, 9)
+    np.testing.assert_array_equal(np.asarray(q.cap_nbr[:, :3, :7]),
+                                  np.asarray(p.cap_nbr))
+    np.testing.assert_array_equal(np.asarray(q.cap_src[:3, :7]),
+                                  np.asarray(p.cap_src))
+    assert float(jnp.sum(q.cap_src)) == float(jnp.sum(p.cap_src))  # inert pad
+    assert float(jnp.sum(q.cap_nbr)) == float(jnp.sum(p.cap_nbr))
+    rp, rs = maxflow_grid(q), maxflow_grid(p)
+    assert float(rp.flow) == float(rs.flow)
+    ref = maxflow_grid_ref(np.asarray(p.cap_nbr), np.asarray(p.cap_src),
+                           np.asarray(p.cap_sink))
+    assert abs(float(rp.flow) - ref) < 1e-4
+    # padded nodes are sink-free: the cut window is the real instance's
+    assert not bool(jnp.any(rp.cut[3:, :])) and not bool(jnp.any(rp.cut[:, 7:]))
+
+
+def test_pad_cost_matrix_value_preservation_edges():
+    """pad_cost_matrix edge cases: m == n is the identity modulo the bonus
+    shift, and all-negative matrices keep their exact optimum through the
+    dummy block."""
+    w = np.asarray([[-5, -1], [-2, -7]])
+    padded, bonus = pad_cost_matrix(w, 2)       # no growth: bonus shift only
+    assert bonus == 8                           # 1 - (-7)
+    np.testing.assert_array_equal(np.asarray(padded), w + bonus)
+    [r] = solve_assignment_batch([w], bucket="max")
+    assert int(r.weight) == optimal_weight(w) == -3
+
+    big, _ = pad_cost_matrix(w, 5)
+    assert big.shape == (5, 5)
+    np.testing.assert_array_equal(np.asarray(big[2:, :]), 0)
+    np.testing.assert_array_equal(np.asarray(big[:, 2:]), 0)
 
 
 def test_routing_batched_matches_per_group():

@@ -1,0 +1,238 @@
+"""Early-exit compaction: compacted == masked == loop of single solves.
+
+The contract under test (repro.core.solver_loop + the ``compact=`` knob):
+gathering still-live instances into dense pow2-sized sub-batches between
+jitted cycle segments changes WHICH instances pay FLOPs each cycle, never
+WHAT any instance computes — cycles are per-instance pure, so compacted
+results bit-match the masked select-freeze path, which bit-matches a loop
+of single-instance solves. This must hold for both solvers, through the
+ragged pad-and-bucket front end, under per-shard device lanes (``mesh=``),
+and at the serve engine.
+
+Multi-device is emulated on CPU exactly as in test_shard.py: a slow
+subprocess test relaunches this file under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``; CI runs the file
+directly with the flag exported.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.assignment.cost_scaling import solve_assignment
+from repro.core.batch import (solve_assignment_batch, solve_maxflow_batch,
+                              stack_grid_problems)
+from repro.core.maxflow.grid import GridProblem, maxflow_grid, \
+    maxflow_grid_batch
+from repro.core.maxflow.ref import random_grid_problem
+from repro.core.solver_loop import bucket_size
+from repro.launch.mesh import compact_lanes, make_solver_mesh
+from repro.serve.engine import SolverEngine
+
+N_DEV = len(jax.devices())
+FORCE_FLAG = "--xla_force_host_platform_device_count=8"
+multi = pytest.mark.skipif(
+    N_DEV < 2, reason="needs >=2 devices; covered via the subprocess test")
+SHARD_COUNTS = sorted({2, N_DEV}) if N_DEV >= 2 else []
+
+
+def _ragged_grid_problems(seed, B, H, W):
+    """Grid instances with deliberately ragged convergence: most are easy
+    (tiny excess, converge in the first cycles), a few carry full load."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(B):
+        cap, cs, ct = random_grid_problem(rng, H, W)
+        if i % 4:                       # 3 of every 4 instances are easy
+            cs = np.minimum(cs, 1.0)
+        out.append(GridProblem(*map(jnp.asarray, (cap, cs, ct))))
+    return out
+
+
+def _ragged_ws(seed, B, n):
+    """Weight matrices with ragged ε schedules (instance difficulty varies)."""
+    ws = np.stack([np.random.default_rng(seed + i).integers(0, 101, (n, n))
+                   for i in range(B)])
+    ws[::3] //= 9                       # short schedules for every third
+    return ws
+
+
+def _assert_trees_equal(a, b):
+    for name, la, lb in zip(a._fields, a, b):
+        if isinstance(la, tuple):  # nested NamedTuple (GridFlowState)
+            _assert_trees_equal(la, lb)
+        else:
+            np.testing.assert_array_equal(
+                np.asarray(la), np.asarray(lb), err_msg=name)
+
+
+@pytest.mark.slow  # ~1 min: full compaction suite in a fresh 8-dev process
+@pytest.mark.skipif(N_DEV >= 2, reason="already multi-device")
+def test_forced_multi_device_subprocess():
+    """Relaunch this file under 8 emulated host devices and require green."""
+    root = pathlib.Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " " + FORCE_FLAG).strip()
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "-x", "-q", str(__file__)],
+        cwd=root, env=env, capture_output=True, text=True, timeout=1500)
+    assert r.returncode == 0, f"\n--- stdout ---\n{r.stdout}\n{r.stderr}"
+    assert "passed" in r.stdout
+
+
+def test_bucket_size_ladder():
+    """pow2 ladder, clamped to the lane size: bounds distinct compiles."""
+    assert [bucket_size(n, 8) for n in (1, 2, 3, 4, 5, 7, 8)] \
+        == [1, 2, 4, 4, 8, 8, 8]
+    assert bucket_size(3, 5) == 4 and bucket_size(5, 5) == 5
+    assert bucket_size(1, 1) == 1
+
+
+@pytest.mark.parametrize("backend", ["xla", "multipush"])
+def test_maxflow_compact_bitmatches_masked_and_single(backend):
+    probs = _ragged_grid_problems(0, 6, 8, 8)
+    batch = stack_grid_problems(probs)
+    masked = maxflow_grid_batch(batch, backend=backend)
+    comp = maxflow_grid_batch(batch, backend=backend, compact=True)
+    _assert_trees_equal(comp, masked)
+    assert int(jnp.max(comp.rounds)) > int(jnp.min(comp.rounds)), \
+        "convergence not ragged — compaction path untested"
+    for b, p in enumerate(probs):
+        rs = maxflow_grid(p, backend=backend)
+        assert float(comp.flow[b]) == float(rs.flow)
+        assert int(comp.rounds[b]) == int(rs.rounds)
+        np.testing.assert_array_equal(np.asarray(comp.cut[b]),
+                                      np.asarray(rs.cut))
+        np.testing.assert_array_equal(np.asarray(comp.state.e[b]),
+                                      np.asarray(rs.state.e))
+
+
+@pytest.mark.parametrize("method", ["pushrelabel", "auction"])
+def test_assignment_compact_bitmatches_masked_and_single(method):
+    ws = _ragged_ws(0, 5, 10)
+    masked = solve_assignment(jnp.asarray(ws), method=method)
+    comp = solve_assignment(jnp.asarray(ws), method=method, compact=True)
+    _assert_trees_equal(comp, masked)
+    for b in range(ws.shape[0]):
+        rs = solve_assignment(jnp.asarray(ws[b]), method=method)
+        np.testing.assert_array_equal(np.asarray(comp.col_of_row[b]),
+                                      np.asarray(rs.col_of_row))
+        np.testing.assert_array_equal(np.asarray(comp.p_x[b]),
+                                      np.asarray(rs.p_x))
+        assert int(comp.rounds[b]) == int(rs.rounds)
+        assert int(comp.pushes[b]) == int(rs.pushes)
+
+
+def test_assignment_compact_requires_batch():
+    w = jnp.asarray(np.random.default_rng(0).integers(0, 9, (5, 5)))
+    with pytest.raises(ValueError, match="batched"):
+        solve_assignment(w, compact=True)
+
+
+def test_compact_unconverged_max_rounds():
+    """Instances that hit max_rounds leave the live set through the rounds
+    cap, not convergence — identical flags and partial state either way."""
+    probs = _ragged_grid_problems(1, 4, 8, 8)
+    batch = stack_grid_problems(probs)
+    kw = dict(max_rounds=2, rounds_per_heuristic=2)
+    masked = maxflow_grid_batch(batch, **kw)
+    comp = maxflow_grid_batch(batch, compact=True, **kw)
+    _assert_trees_equal(comp, masked)
+    assert not bool(jnp.all(comp.converged))   # the cap actually bit
+
+
+@pytest.mark.parametrize("bucket", ["max", "pow2"])
+def test_ragged_front_end_compact(bucket):
+    rng = np.random.default_rng(2)
+    shapes = [(5, 5), (8, 8), (4, 7), (8, 8), (5, 5)]
+    probs = [GridProblem(*map(jnp.asarray, random_grid_problem(rng, h, w)))
+             for h, w in shapes]
+    base = solve_maxflow_batch(probs, bucket=bucket)
+    comp = solve_maxflow_batch(probs, bucket=bucket, compact=True)
+    for a, b in zip(comp, base):
+        _assert_trees_equal(a, b)
+
+    ws = [np.random.default_rng(i).integers(-30, 71, (n, n))
+          for i, n in enumerate([4, 9, 6, 9, 5])]
+    for a, b in zip(solve_assignment_batch(ws, bucket=bucket, compact=True),
+                    solve_assignment_batch(ws, bucket=bucket)):
+        _assert_trees_equal(a, b)
+
+
+@multi
+def test_maxflow_compact_sharded_bitmatch():
+    """Per-shard lanes: compaction within each device's slice bit-matches
+    the unsharded masked solve."""
+    probs = _ragged_grid_problems(3, 8, 8, 8)
+    batch = stack_grid_problems(probs)
+    base = maxflow_grid_batch(batch)
+    for s in SHARD_COUNTS:
+        comp = maxflow_grid_batch(batch, compact=True,
+                                  mesh=make_solver_mesh(s))
+        _assert_trees_equal(comp, base)
+
+
+@multi
+def test_assignment_compact_sharded_bitmatch():
+    ws = _ragged_ws(5, 8, 10)
+    base = solve_assignment(jnp.asarray(ws))
+    for s in SHARD_COUNTS:
+        comp = solve_assignment(jnp.asarray(ws), compact=True,
+                                mesh=make_solver_mesh(s))
+        _assert_trees_equal(comp, base)
+
+
+@multi
+def test_ragged_front_end_compact_sharded():
+    """Ragged queue sizes shard via inert padding, then compact per lane
+    (the inert pad instances are the FIRST to leave the live set)."""
+    rng = np.random.default_rng(4)
+    shapes = [(5, 5), (8, 8), (4, 7), (8, 8), (5, 5)]
+    probs = [GridProblem(*map(jnp.asarray, random_grid_problem(rng, h, w)))
+             for h, w in shapes]
+    base = solve_maxflow_batch(probs, bucket="max")
+    for s in SHARD_COUNTS:
+        comp = solve_maxflow_batch(probs, bucket="max", compact=True,
+                                   mesh=make_solver_mesh(s))
+        for a, b in zip(comp, base):
+            _assert_trees_equal(a, b)
+
+
+@multi
+def test_compact_lanes_validation():
+    mesh = make_solver_mesh(2)
+    with pytest.raises(ValueError, match="not divisible"):
+        compact_lanes(mesh, None, 5)
+    lanes = compact_lanes(mesh, None, 6)
+    assert [(lo, hi) for lo, hi, _ in lanes] == [(0, 3), (3, 6)]
+    assert [d for _, _, d in lanes] == list(mesh.devices.reshape(-1))
+    probs = _ragged_grid_problems(6, 3, 6, 6)
+    with pytest.raises(ValueError, match="not divisible"):
+        maxflow_grid_batch(stack_grid_problems(probs), compact=True,
+                           mesh=mesh)
+
+
+def test_engine_compact_matches_direct_front_end():
+    """A compact engine returns exactly what the direct batch calls do
+    (sharded when >1 device is available)."""
+    mesh = make_solver_mesh() if N_DEV >= 2 else None
+    engine = SolverEngine(mesh=mesh, bucket="max", compact=True)
+    rng = np.random.default_rng(7)
+    probs = [GridProblem(*map(jnp.asarray, random_grid_problem(rng, h, w)))
+             for h, w in [(6, 6), (4, 5), (6, 6)]]
+    ws = [rng.integers(0, 50, (n, n)) for n in (5, 7)]
+    tickets = [engine.submit_maxflow(p) for p in probs]
+    tickets += [engine.submit_assignment(w) for w in ws]
+    out = engine.flush()
+    assert sorted(out) == tickets and engine.pending() == 0
+
+    base_f = solve_maxflow_batch(probs, bucket="max", mesh=mesh)
+    base_a = solve_assignment_batch(ws, bucket="max", mesh=mesh)
+    for t, b in zip(tickets, base_f + base_a):
+        _assert_trees_equal(out[t], b)
