@@ -208,6 +208,91 @@ def bench_compaction(rows, repeats=2):
                  f"speedup_vs_masked={us_m / us_c:.2f}x"))
 
 
+def bench_serving(rows, repeats=2):
+    """Blocking-flush vs async-pipelined serving (throughput + latency).
+
+    One recorded request stream — ragged-convergence grid cuts, the
+    serving profile compaction pays on — is served three ways:
+
+      * ``serving_blocking_flush`` — the PR-2 path: submit a chunk, call
+        ``SolverEngine.flush()``, repeat. Host padding of chunk k+1 waits
+        for the device solve of chunk k.
+      * ``serving_async_masked`` — ``AsyncSolverEngine`` with the masked
+        driver forced: size-triggered background flushes, host
+        pad-and-bucket of batch k+1 overlapped with the device solve of
+        batch k (double-buffered lanes).
+      * ``serving_async_adaptive`` — adaptive dispatch on top: the
+        convergence-spread EWMA flips ragged buckets to the compacted
+        driver (dispatch counts in the derived column prove it).
+
+    Derived columns report instances/sec and the async paths' p50/p99
+    ticket latency (submit -> future resolution). Numbers land in
+    benchmarks/RESULTS_serving.md (``python -m benchmarks.run serving``).
+    """
+    from repro.core.maxflow.grid import GridProblem
+    from repro.core.maxflow.ref import random_grid_problem
+    from repro.serve.engine import SolverEngine
+    from repro.serve.scheduler import AsyncSolverEngine
+
+    rng = np.random.default_rng(0)
+    hw, B, chunk = 64, 32, 8
+    probs = []
+    for i in range(B):
+        cap, cs, ct = random_grid_problem(rng, hw, hw, max_cap=20,
+                                          terminal_density=0.3)
+        if i % 4:   # 3 of 4 easy -> ragged convergence within every chunk
+            cs = np.minimum(cs, 1.0)
+        probs.append(GridProblem(*map(jnp.asarray, (cap, cs, ct))))
+
+    def blocking():
+        eng = SolverEngine(bucket="max")
+        n = 0
+        for lo in range(0, B, chunk):
+            for p in probs[lo:lo + chunk]:
+                eng.submit_maxflow(p)
+            n += len(eng.flush())
+        assert n == B
+
+    def asynchronous(dispatch):
+        metrics = None
+        with AsyncSolverEngine(max_batch=chunk, max_delay_ms=10_000.0,
+                               dispatch=dispatch, spread_threshold=0.15,
+                               min_compact_batch=4) as eng:
+            futs = [eng.submit_maxflow(p) for p in probs]
+            for f in futs:
+                f.result(timeout=600)
+            metrics = eng.metrics
+        return metrics
+
+    blocking()                        # compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        blocking()
+    us_b = (time.perf_counter() - t0) / repeats * 1e6
+    rows.append(("serving_blocking_flush", us_b,
+                 f"inst_per_s={B / us_b * 1e6:.1f};chunks={B // chunk}"))
+
+    for dispatch in ("masked", "adaptive"):
+        asynchronous(dispatch)        # compile + warm the EWMA path
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            m = asynchronous(dispatch)
+        us_a = (time.perf_counter() - t0) / repeats * 1e6
+        snap = m.snapshot()
+        lat = snap["latency_ms"]
+        extra = ""
+        if dispatch == "adaptive":
+            d = snap["dispatches"]
+            extra = (f";masked_dispatches={d.get('maxflow:masked', 0)}"
+                     f";compacted_dispatches="
+                     f"{d.get('maxflow:compacted', 0)}")
+        rows.append((f"serving_async_{dispatch}", us_a,
+                     f"inst_per_s={B / us_a * 1e6:.1f};"
+                     f"speedup_vs_blocking={us_b / us_a:.2f}x;"
+                     f"p50_ms={lat['p50']:.1f};p99_ms={lat['p99']:.1f}"
+                     + extra))
+
+
 def bench_assignment(rows, repeats=2):
     """Paper §6: n<=30, costs<=100, ~1/20 s on a GTX 560 Ti."""
     from repro.core.assignment.cost_scaling import solve_assignment

@@ -6,26 +6,30 @@ results/dryrun_*.json).
 
 Usage::
 
-    python -m benchmarks.run [bench] [--repeats N]
+    python -m benchmarks.run [bench] [--repeats N] [--csv PATH]
 
 Unknown bench names are rejected with the list of available benches
-(previously they silently printed an empty CSV).
+(previously they silently printed an empty CSV). ``--csv PATH`` writes the
+same CSV to a file so callers (CI's artifact step) don't have to depend on
+shell redirection or the current working directory.
 """
 from __future__ import annotations
 
 import argparse
+import pathlib
 
 from benchmarks.bench_flow import (bench_assignment, bench_batched,
                                    bench_compaction, bench_flash_kernel,
                                    bench_kernels, bench_maxflow,
                                    bench_refine_ops, bench_routing,
-                                   bench_sharded)
+                                   bench_serving, bench_sharded)
 
 BENCHES = {
     "maxflow": bench_maxflow,
     "batched": bench_batched,
     "sharded": bench_sharded,
     "compaction": bench_compaction,
+    "serving": bench_serving,
     "assignment": bench_assignment,
     "refine_ops": bench_refine_ops,
     "routing": bench_routing,
@@ -46,6 +50,10 @@ def main(argv: list[str] | None = None) -> None:
         "--repeats", type=int, default=2,
         help="timed repetitions per measurement after the compile call "
              "(default: %(default)s)")
+    parser.add_argument(
+        "--csv", type=pathlib.Path, default=None, metavar="PATH",
+        help="also write the CSV to PATH (parent dirs created; output is "
+             "still printed to stdout)")
     args = parser.parse_args(argv)
 
     rows: list[tuple] = []
@@ -53,9 +61,12 @@ def main(argv: list[str] | None = None) -> None:
         if args.bench and args.bench != name:
             continue
         fn(rows, repeats=args.repeats)
-    print("name,us_per_call,derived")
-    for name, us, derived in rows:
-        print(f"{name},{us:.1f},{derived}")
+    lines = ["name,us_per_call,derived"]
+    lines += [f"{name},{us:.1f},{derived}" for name, us, derived in rows]
+    print("\n".join(lines))
+    if args.csv is not None:
+        args.csv.parent.mkdir(parents=True, exist_ok=True)
+        args.csv.write_text("\n".join(lines) + "\n")
 
 
 if __name__ == "__main__":

@@ -12,23 +12,30 @@ matching solvers — lives here:
   front end for ragged collections (``repro.core.batch``).
 * ``freeze`` — the per-instance liveness select behind batched solving
   (``repro.core.masking``).
-* ``LoopSpec`` / ``run_masked`` / ``run_compacted`` — the unified
-  solver-loop runtime (``repro.core.solver_loop``): masked iteration and
-  early-exit compaction, shared by both solvers.
+* ``LoopSpec`` / ``run_masked`` / ``run_compacted`` / ``trace_cycles`` —
+  the unified solver-loop runtime (``repro.core.solver_loop``): masked
+  iteration, early-exit compaction, and the per-cycle live-count trace
+  hook, shared by both solvers.
+* ``BucketStats`` — per-dispatch occupancy/round-spread telemetry
+  (``stats_out=`` on the batch front ends; the signal behind
+  ``repro.serve.scheduler``'s adaptive dispatch).
 
 Every entry point accepts ``mesh=`` (device-mesh batch sharding) and the
 batched ones ``compact=`` (early-exit compaction); see docs/batching.md.
 """
 from repro.core.assignment.cost_scaling import (AssignmentResult,
                                                solve_assignment)
-from repro.core.batch import solve_assignment_batch, solve_maxflow_batch
+from repro.core.batch import (BucketStats, solve_assignment_batch,
+                              solve_maxflow_batch)
 from repro.core.masking import freeze
 from repro.core.maxflow.grid import (GridFlowResult, GridProblem,
                                      maxflow_grid, maxflow_grid_batch)
-from repro.core.solver_loop import LoopSpec, run_compacted, run_masked
+from repro.core.solver_loop import (LoopSpec, run_compacted, run_masked,
+                                    trace_cycles)
 
 __all__ = [
     "AssignmentResult",
+    "BucketStats",
     "GridFlowResult",
     "GridProblem",
     "LoopSpec",
@@ -40,4 +47,5 @@ __all__ = [
     "solve_assignment",
     "solve_assignment_batch",
     "solve_maxflow_batch",
+    "trace_cycles",
 ]

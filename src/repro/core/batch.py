@@ -29,10 +29,25 @@ grids / zero-weight matrices) that converge immediately and are dropped
 before returning — so ragged queues of any size shard cleanly, and results
 still bit-match the unsharded path (tests/test_shard.py). See
 docs/batching.md for the full semantics.
+
+Two-stage split (the serving scheduler's pipeline hook): each ``solve_*``
+front end is the composition of a HOST stage and a DEVICE stage —
+
+  * ``prepare_maxflow_buckets`` / ``prepare_assignment_buckets`` — pure
+    host work (bucketing, padding, stacking) producing ``PreparedBucket``s;
+  * ``solve_prepared_maxflow`` / ``solve_prepared_assignment`` — the jitted
+    dispatch plus result cropping, returning per-request results AND a
+    ``BucketStats`` record (batch occupancy, per-instance round spread,
+    convergence counts).
+
+``repro.serve.scheduler`` overlaps the host stage of batch *k+1* with the
+device stage of batch *k* and feeds the stats into its adaptive
+masked-vs-compacted dispatch policy; the blocking front ends below expose
+the same stats through ``stats_out=``.
 """
 from __future__ import annotations
 
-from typing import Iterable, Sequence
+from typing import Any, Iterable, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +61,9 @@ from repro.core.maxflow.grid import (GridFlowResult, GridProblem,
 __all__ = [
     "pad_grid_problem", "stack_grid_problems", "pad_cost_matrix",
     "inert_grid_problem", "solve_maxflow_batch", "solve_assignment_batch",
+    "PreparedBucket", "BucketStats", "prepare_maxflow_buckets",
+    "solve_prepared_maxflow", "prepare_assignment_buckets",
+    "solve_prepared_assignment",
 ]
 
 
@@ -69,6 +87,63 @@ def _shard_pad(n_real: int, mesh, mesh_axis) -> int:
         return 0
     from repro.launch.mesh import shard_count
     return -n_real % shard_count(mesh, mesh_axis)
+
+
+class PreparedBucket(NamedTuple):
+    """One bucket's host-stage output: padded, stacked, dispatch-ready.
+
+    ``idxs`` are positions in the original request sequence (results from
+    the device stage are keyed by them); ``shapes`` are the requests'
+    original shapes for cropping; ``originals`` holds the raw cost matrices
+    for assignment buckets (weights are recomputed on unpadded values) and
+    is ``None`` for max-flow. ``n_pad`` counts trailing inert instances
+    appended for mesh-shard divisibility — the stacked batch is
+    ``len(idxs) + n_pad`` instances, reals first.
+    """
+
+    kind: str                    # "maxflow" | "assignment"
+    shape: tuple                 # bucket shape: (H, W) grids, (m,) matrices
+    idxs: tuple[int, ...]        # request positions, in submission order
+    shapes: tuple                # original per-request shapes
+    stacked: Any                 # GridProblem of (B,4,H,W)... or (B,m,m)
+    originals: tuple | None      # assignment: original (n,n) matrices
+    n_pad: int                   # trailing inert shard-padding instances
+
+
+class BucketStats(NamedTuple):
+    """What one batched dispatch observed — the adaptive-dispatch signal.
+
+    ``spread`` is the normalized per-instance round raggedness
+    ``(rounds_max - rounds_min) / max(rounds_max, 1)`` over REAL instances:
+    ~0 when the whole bucket converges together (masked dispatch is
+    optimal), toward 1 when stragglers dominate (early-exit compaction
+    pays — see benchmarks/RESULTS_compaction.md).
+    """
+
+    kind: str
+    shape: tuple
+    n_real: int
+    n_pad: int
+    compact: bool
+    rounds_min: int
+    rounds_max: int
+    rounds_mean: float
+    n_converged: int
+
+    @property
+    def spread(self) -> float:
+        return (self.rounds_max - self.rounds_min) / max(self.rounds_max, 1)
+
+
+def _stats(kind: str, prep: PreparedBucket, rounds, converged,
+           compact: bool) -> BucketStats:
+    r = np.asarray(rounds)[:len(prep.idxs)]          # real instances only
+    c = np.asarray(converged)[:len(prep.idxs)]
+    return BucketStats(
+        kind=kind, shape=prep.shape, n_real=len(prep.idxs),
+        n_pad=prep.n_pad, compact=compact,
+        rounds_min=int(r.min()), rounds_max=int(r.max()),
+        rounds_mean=float(r.mean()), n_converged=int(c.sum()))
 
 
 # ---------------------------------------------------------------- max-flow
@@ -115,6 +190,79 @@ def inert_grid_problem(H: int, W: int) -> GridProblem:
     )
 
 
+def prepare_maxflow_buckets(
+    problems: Iterable[GridProblem],
+    *,
+    bucket: str = "max",
+    mesh=None,
+    mesh_axis: str | None = None,
+) -> list[PreparedBucket]:
+    """HOST stage: bucket, pad, and stack a ragged max-flow queue.
+
+    Pure host/numpy + stacking work, no solver dispatch — this is the stage
+    the async scheduler overlaps with the previous batch's device solve.
+    Returns one ``PreparedBucket`` per distinct bucket shape, each already
+    padded with inert instances to the mesh's shard count (if any).
+    """
+    problems = [GridProblem(*(jnp.asarray(a) for a in p)) for p in problems]
+    if not problems:
+        return []
+    shapes = [tuple(p.cap_src.shape) for p in problems]
+    max_shape = (max(s[0] for s in shapes), max(s[1] for s in shapes))
+
+    buckets: dict[tuple, list[int]] = {}
+    for i, s in enumerate(shapes):
+        buckets.setdefault(_bucket_shape(s, bucket, max_shape), []).append(i)
+
+    out = []
+    for (H, W), idxs in buckets.items():
+        padded = [pad_grid_problem(problems[i], H, W) for i in idxs]
+        n_pad = _shard_pad(len(idxs), mesh, mesh_axis)
+        padded += [inert_grid_problem(H, W)] * n_pad
+        out.append(PreparedBucket(
+            kind="maxflow", shape=(H, W), idxs=tuple(idxs),
+            shapes=tuple(shapes[i] for i in idxs),
+            stacked=stack_grid_problems(padded), originals=None,
+            n_pad=n_pad))
+    return out
+
+
+def solve_prepared_maxflow(
+    prep: PreparedBucket,
+    *,
+    backend: str = "xla",
+    compact: bool = False,
+    mesh=None,
+    mesh_axis: str | None = None,
+    **solver_kw,
+) -> tuple[dict[int, GridFlowResult], BucketStats]:
+    """DEVICE stage: one batched dispatch of a prepared max-flow bucket.
+
+    Returns ``({request_position: result}, BucketStats)`` — results are
+    cropped back to each request's original (H, W), exactly as
+    ``solve_maxflow_batch`` returns them.
+    """
+    res = maxflow_grid_batch(prep.stacked, backend=backend, compact=compact,
+                             mesh=mesh, mesh_axis=mesh_axis, **solver_kw)
+    out: dict[int, GridFlowResult] = {}
+    for b, i in enumerate(prep.idxs):
+        h, w = prep.shapes[b]
+        st = res.state
+        out[i] = GridFlowResult(
+            flow=res.flow[b],
+            cut=res.cut[b, :h, :w],
+            state=st._replace(
+                e=st.e[b, :h, :w], h=st.h[b, :h, :w],
+                cap=st.cap[b, :, :h, :w],
+                cap_src=st.cap_src[b, :h, :w],
+                cap_sink=st.cap_sink[b, :h, :w],
+                sink_flow=st.sink_flow[b], src_flow=st.src_flow[b]),
+            rounds=res.rounds[b],
+            converged=res.converged[b],
+        )
+    return out, _stats("maxflow", prep, res.rounds, res.converged, compact)
+
+
 def solve_maxflow_batch(
     problems: Iterable[GridProblem],
     *,
@@ -123,6 +271,7 @@ def solve_maxflow_batch(
     compact: bool = False,
     mesh=None,
     mesh_axis: str | None = None,
+    stats_out: list | None = None,
     **solver_kw,
 ) -> list[GridFlowResult]:
     """Solve many (possibly ragged) grid-cut instances in batched dispatches.
@@ -143,44 +292,27 @@ def solve_maxflow_batch(
         sharded across it, with inert zero-capacity instances appended so
         every bucket splits evenly (dropped before returning). With
         ``compact=True``, compaction runs within each shard's lane.
+      stats_out: optional list; one ``BucketStats`` per dispatched bucket is
+        appended (occupancy + round-spread telemetry for the serving
+        scheduler's adaptive dispatch).
       **solver_kw: forwarded to ``maxflow_grid_batch`` (e.g. ``max_rounds``).
 
     Returns one ``GridFlowResult`` per instance in input order, with ``cut``
     and state planes cropped back to the instance's original (H, W).
     """
-    problems = [GridProblem(*(jnp.asarray(a) for a in p)) for p in problems]
+    problems = list(problems)
     if not problems:
         return []
-    shapes = [tuple(p.cap_src.shape) for p in problems]
-    max_shape = (max(s[0] for s in shapes), max(s[1] for s in shapes))
-
-    buckets: dict[tuple, list[int]] = {}
-    for i, s in enumerate(shapes):
-        buckets.setdefault(_bucket_shape(s, bucket, max_shape), []).append(i)
-
     results: list[GridFlowResult | None] = [None] * len(problems)
-    for (H, W), idxs in buckets.items():
-        padded = [pad_grid_problem(problems[i], H, W) for i in idxs]
-        padded += [inert_grid_problem(H, W)] * _shard_pad(
-            len(idxs), mesh, mesh_axis)
-        stacked = stack_grid_problems(padded)
-        res = maxflow_grid_batch(stacked, backend=backend, compact=compact,
-                                 mesh=mesh, mesh_axis=mesh_axis, **solver_kw)
-        for b, i in enumerate(idxs):
-            h, w = shapes[i]
-            st = res.state
-            results[i] = GridFlowResult(
-                flow=res.flow[b],
-                cut=res.cut[b, :h, :w],
-                state=st._replace(
-                    e=st.e[b, :h, :w], h=st.h[b, :h, :w],
-                    cap=st.cap[b, :, :h, :w],
-                    cap_src=st.cap_src[b, :h, :w],
-                    cap_sink=st.cap_sink[b, :h, :w],
-                    sink_flow=st.sink_flow[b], src_flow=st.src_flow[b]),
-                rounds=res.rounds[b],
-                converged=res.converged[b],
-            )
+    for prep in prepare_maxflow_buckets(problems, bucket=bucket, mesh=mesh,
+                                        mesh_axis=mesh_axis):
+        out, stats = solve_prepared_maxflow(
+            prep, backend=backend, compact=compact, mesh=mesh,
+            mesh_axis=mesh_axis, **solver_kw)
+        if stats_out is not None:
+            stats_out.append(stats)
+        for i, r in out.items():
+            results[i] = r
     return results  # type: ignore[return-value]
 
 
@@ -211,6 +343,81 @@ def pad_cost_matrix(w, m: int):
     return jnp.asarray(out), bonus
 
 
+def prepare_assignment_buckets(
+    costs: Sequence,
+    *,
+    bucket: str = "max",
+    mesh=None,
+    mesh_axis: str | None = None,
+) -> list[PreparedBucket]:
+    """HOST stage: bucket, bonus-pad, and stack a ragged assignment queue.
+
+    Mirrors ``prepare_maxflow_buckets``; ``originals`` keeps the unpadded
+    matrices so the device stage can recompute matching weights on the REAL
+    costs (the padded solve runs on bonus-shifted values).
+    """
+    costs = [np.asarray(w) for w in costs]
+    if not costs:
+        return []
+    sizes = [w.shape[-1] for w in costs]
+    max_n = max(sizes)
+
+    buckets: dict[tuple, list[int]] = {}
+    for i, n in enumerate(sizes):
+        buckets.setdefault(
+            _bucket_shape((n,), bucket, (max_n,)), []).append(i)
+
+    out = []
+    for (m,), idxs in buckets.items():
+        mats = [pad_cost_matrix(costs[i], m)[0] for i in idxs]
+        # inert shard padding: zero-weight instances (any perfect matching
+        # is optimal; converges in one short eps=1 refine) that other
+        # instances never observe
+        n_pad = _shard_pad(len(idxs), mesh, mesh_axis)
+        mats += [jnp.zeros((m, m), jnp.int32)] * n_pad
+        out.append(PreparedBucket(
+            kind="assignment", shape=(m,), idxs=tuple(idxs),
+            shapes=tuple((sizes[i],) for i in idxs),
+            stacked=jnp.stack(mats),
+            originals=tuple(costs[i] for i in idxs), n_pad=n_pad))
+    return out
+
+
+def solve_prepared_assignment(
+    prep: PreparedBucket,
+    *,
+    compact: bool = False,
+    mesh=None,
+    mesh_axis: str | None = None,
+    **solver_kw,
+) -> tuple[dict[int, AssignmentResult], BucketStats]:
+    """DEVICE stage: one batched dispatch of a prepared assignment bucket.
+
+    Returns ``({request_position: result}, BucketStats)``; weights are
+    recomputed on the ORIGINAL (unpadded) costs, exactly as
+    ``solve_assignment_batch`` returns them.
+    """
+    res = solve_assignment(prep.stacked, compact=compact, mesh=mesh,
+                           mesh_axis=mesh_axis, **solver_kw)
+    out: dict[int, AssignmentResult] = {}
+    for b, i in enumerate(prep.idxs):
+        (n,) = prep.shapes[b]
+        col = res.col_of_row[b, :n]
+        valid = col < n          # unconverged rows may hold dummy cols
+        picked = jnp.take_along_axis(
+            jnp.asarray(prep.originals[b], jnp.int32),
+            jnp.minimum(col, n - 1)[:, None], axis=1)[:, 0]
+        weight = jnp.sum(jnp.where(valid, picked, 0))
+        out[i] = AssignmentResult(
+            col_of_row=col, weight=weight,
+            p_x=res.p_x[b, :n], p_y=res.p_y[b, :n],
+            rounds=res.rounds[b], pushes=res.pushes[b],
+            relabels=res.relabels[b], converged=res.converged[b],
+        )
+    return out, _stats("assignment", prep, res.rounds, res.converged,
+                       compact)
+
+
 def solve_assignment_batch(
     costs: Sequence,
     *,
@@ -218,6 +425,7 @@ def solve_assignment_batch(
     compact: bool = False,
     mesh=None,
     mesh_axis: str | None = None,
+    stats_out: list | None = None,
     **solver_kw,
 ) -> list[AssignmentResult]:
     """Solve many (possibly ragged) assignment instances in batched dispatches.
@@ -234,6 +442,8 @@ def solve_assignment_batch(
         sharded across it, with inert zero-weight matrices appended so every
         bucket splits evenly (dropped before returning). With
         ``compact=True``, compaction runs within each shard's lane.
+      stats_out: optional list; one ``BucketStats`` per dispatched bucket is
+        appended (see ``solve_maxflow_batch``).
       **solver_kw: forwarded to ``solve_assignment`` (``method=``,
         ``max_rounds=``, ``backend=``, ...).
 
@@ -249,40 +459,17 @@ def solve_assignment_batch(
     and they contribute 0 to ``weight`` rather than a clamped arbitrary
     entry.
     """
-    costs = [np.asarray(w) for w in costs]
+    costs = list(costs)
     if not costs:
         return []
-    sizes = [w.shape[-1] for w in costs]
-    max_n = max(sizes)
-
-    buckets: dict[tuple, list[int]] = {}
-    for i, n in enumerate(sizes):
-        buckets.setdefault(
-            _bucket_shape((n,), bucket, (max_n,)), []).append(i)
-
     results: list[AssignmentResult | None] = [None] * len(costs)
-    for (m,), idxs in buckets.items():
-        mats = [pad_cost_matrix(costs[i], m)[0] for i in idxs]
-        # inert shard padding: zero-weight instances (any perfect matching
-        # is optimal; converges in one short eps=1 refine) that other
-        # instances never observe
-        mats += [jnp.zeros((m, m), jnp.int32)] * _shard_pad(
-            len(idxs), mesh, mesh_axis)
-        stacked = jnp.stack(mats)
-        res = solve_assignment(stacked, compact=compact, mesh=mesh,
-                               mesh_axis=mesh_axis, **solver_kw)
-        for b, i in enumerate(idxs):
-            n = sizes[i]
-            col = res.col_of_row[b, :n]
-            valid = col < n          # unconverged rows may hold dummy cols
-            picked = jnp.take_along_axis(
-                jnp.asarray(costs[i], jnp.int32),
-                jnp.minimum(col, n - 1)[:, None], axis=1)[:, 0]
-            weight = jnp.sum(jnp.where(valid, picked, 0))
-            results[i] = AssignmentResult(
-                col_of_row=col, weight=weight,
-                p_x=res.p_x[b, :n], p_y=res.p_y[b, :n],
-                rounds=res.rounds[b], pushes=res.pushes[b],
-                relabels=res.relabels[b], converged=res.converged[b],
-            )
+    for prep in prepare_assignment_buckets(costs, bucket=bucket, mesh=mesh,
+                                           mesh_axis=mesh_axis):
+        out, stats = solve_prepared_assignment(
+            prep, compact=compact, mesh=mesh, mesh_axis=mesh_axis,
+            **solver_kw)
+        if stats_out is not None:
+            stats_out.append(stats)
+        for i, r in out.items():
+            results[i] = r
     return results  # type: ignore[return-value]

@@ -42,6 +42,8 @@ mask is fetched, so devices run their cycles concurrently.
 """
 from __future__ import annotations
 
+import contextlib
+import contextvars
 import functools
 from typing import Callable, NamedTuple
 
@@ -50,6 +52,32 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.masking import freeze
+
+# Per-cycle live-count trace hook for the COMPACTED driver. ``run_masked``
+# is a jitted while_loop — its liveness never reaches the host — but
+# ``run_compacted`` fetches the live set every cycle anyway, so exposing it
+# costs nothing. Thread-local (a ContextVar) on purpose: the serving
+# scheduler's lane threads trace their own dispatches without seeing each
+# other's cycles.
+_cycle_trace: contextvars.ContextVar[Callable | None] = \
+    contextvars.ContextVar("solver_loop_cycle_trace", default=None)
+
+
+@contextlib.contextmanager
+def trace_cycles(fn: Callable[[int, int], None]):
+    """Install ``fn(cycle_index, n_live)`` as this thread's compaction trace.
+
+    While active, every host cycle of ``run_compacted`` reports the total
+    number of still-live instances (across all lanes) BEFORE dispatching
+    that cycle. Used by ``repro.serve.metrics`` to record live-set decay
+    curves; tests use it to assert compaction actually shrinks the working
+    set. The hook must be cheap and must not raise.
+    """
+    token = _cycle_trace.set(fn)
+    try:
+        yield
+    finally:
+        _cycle_trace.reset(token)
 
 
 class LoopSpec(NamedTuple):
@@ -182,7 +210,12 @@ def run_compacted(spec: LoopSpec, state, n_instances: int, *, lanes=None):
     for m in masks:
         live_idx.append(np.nonzero(np.asarray(m))[0])
 
+    trace = _cycle_trace.get()
+    cycle = 0
     while any(li.size for li in live_idx):
+        if trace is not None:
+            trace(cycle, int(sum(li.size for li in live_idx)))
+        cycle += 1
         pending: list = [None] * len(lanes)
         for i, (lo, hi, dev) in enumerate(lanes):
             li = live_idx[i]

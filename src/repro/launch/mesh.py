@@ -120,6 +120,47 @@ def compact_lanes(mesh, mesh_axis: str | None, batch_size: int):
     return [(i * per, (i + 1) * per, devs[i]) for i in range(n)]
 
 
+def scheduler_lanes(mesh, mesh_axis: str | None = None, n_lanes: int = 2):
+    """Per-lane meshes for the async scheduler's double-buffered dispatch.
+
+    The serving scheduler (``repro.serve.scheduler.AsyncSolverEngine``)
+    keeps ``n_lanes`` dispatch lanes so batch *k+1*'s host padding overlaps
+    batch *k*'s device solve. This helper decides what each lane dispatches
+    ON:
+
+    * ``mesh is None`` — every lane gets ``None`` (default device; overlap
+      is host-vs-device pipelining only).
+    * mesh with >= ``n_lanes`` devices — the mesh's devices split into
+      ``n_lanes`` contiguous DISJOINT sub-meshes (remainder devices go to
+      the leading lanes), so two in-flight batches run on different
+      hardware concurrently, not just back-to-back in one device queue.
+    * fewer devices than lanes — every lane shares the full mesh.
+
+    Results are unaffected either way: sharded solves bit-match unsharded
+    ones (tests/test_shard.py), so WHICH sub-mesh a batch lands on never
+    changes its values. Requires a 1-D solver mesh (``make_solver_mesh``).
+    """
+    if n_lanes < 1:
+        raise ValueError(f"n_lanes must be >= 1, got {n_lanes}")
+    if mesh is None:
+        return [None] * n_lanes
+    axis = solver_batch_axis(mesh, mesh_axis)
+    devs = list(mesh.devices.reshape(-1))
+    if len(mesh.axis_names) != 1:
+        raise ValueError(
+            f"scheduler_lanes needs a 1-D solver mesh, got axes "
+            f"{mesh.axis_names}")
+    if len(devs) < n_lanes:
+        return [mesh] * n_lanes
+    per, rem = divmod(len(devs), n_lanes)
+    lanes, lo = [], 0
+    for i in range(n_lanes):
+        hi = lo + per + (1 if i < rem else 0)
+        lanes.append(jax.sharding.Mesh(np.array(devs[lo:hi]), (axis,)))
+        lo = hi
+    return lanes
+
+
 def shard_batched(fn: Callable, mesh, mesh_axis: str | None = None):
     """Wrap a batch-leading ``fn`` so the batch axis splits across ``mesh``.
 

@@ -13,6 +13,12 @@ Two engines live here:
   ``repro.core.batch``, every bucket is one jitted dispatch, and an optional
   device mesh shards each bucket's batch axis (``shard_map``, zero
   cross-device traffic; see docs/batching.md).
+
+``SolverEngine`` is also the SYNCHRONOUS CORE of the async serving
+scheduler (``repro.serve.scheduler.AsyncSolverEngine``): the scheduler
+drives the engine's two-stage ``prepare`` (host pad-and-bucket) /
+``solve_prepared`` (device dispatch) split so batch *k+1*'s host work
+overlaps batch *k*'s device solve — see docs/serving.md.
 """
 from __future__ import annotations
 
@@ -23,6 +29,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.batch import (BucketStats, PreparedBucket,
+                              prepare_assignment_buckets,
+                              prepare_maxflow_buckets,
+                              solve_prepared_assignment,
+                              solve_prepared_maxflow)
+from repro.core.maxflow.grid import GridProblem
 from repro.models.layers import Sharder
 from repro.models.model import apply_model, init_caches
 
@@ -63,6 +75,56 @@ def make_serve_step(cfg: ModelConfig, axes, shd: Sharder,
     return serve_step
 
 
+def validate_grid_problem(problem) -> GridProblem:
+    """Canonicalize + validate a max-flow request (shapes, dtypes, values).
+
+    The submit-time contract shared by ``SolverEngine`` and
+    ``AsyncSolverEngine``: malformed requests are rejected BEFORE a ticket
+    or future exists, so a queue can never hold an entry that would wedge a
+    batched flush. Checks shape ((4, H, W) / (H, W) / (H, W)), numeric
+    dtype (bool and object arrays are refused), and values — capacities
+    must be finite and non-negative (a negative or NaN capacity breaks the
+    residual-graph invariants silently rather than loudly).
+    """
+    try:
+        cap, cs, ct = (jnp.asarray(a) for a in problem)
+    except (TypeError, ValueError) as e:
+        raise ValueError(f"malformed grid problem: not array-like ({e})")
+    if cap.ndim != 3 or cap.shape[0] != 4 or cs.shape != ct.shape \
+            or cs.shape != cap.shape[1:]:
+        raise ValueError(
+            f"malformed grid problem: cap_nbr {cap.shape}, "
+            f"cap_src {cs.shape}, cap_sink {ct.shape}; expected "
+            f"(4, H, W) / (H, W) / (H, W)")
+    for name, a in (("cap_nbr", cap), ("cap_src", cs), ("cap_sink", ct)):
+        if not (jnp.issubdtype(a.dtype, jnp.floating)
+                or jnp.issubdtype(a.dtype, jnp.integer)):
+            raise ValueError(
+                f"malformed grid problem: {name} has non-numeric dtype "
+                f"{a.dtype} (need integer or floating capacities)")
+        v = np.asarray(a)
+        if not np.all(np.isfinite(v)):
+            raise ValueError(
+                f"malformed grid problem: {name} contains non-finite "
+                f"capacities (NaN/inf)")
+        if np.any(v < 0):
+            raise ValueError(
+                f"malformed grid problem: {name} contains negative "
+                f"capacities (min={v.min()})")
+    return GridProblem(cap, cs, ct)
+
+
+def validate_assignment_matrix(w) -> np.ndarray:
+    """Canonicalize + validate an assignment request (square int matrix)."""
+    w = np.asarray(w)
+    if w.ndim != 2 or w.shape[0] != w.shape[1] \
+            or not np.issubdtype(w.dtype, np.integer):
+        raise ValueError(
+            f"malformed assignment request: need a square integer "
+            f"matrix, got shape {w.shape} dtype {w.dtype}")
+    return w
+
+
 class SolverEngine:
     """Request queue -> pad-and-bucket -> (sharded) batched solve.
 
@@ -74,6 +136,13 @@ class SolverEngine:
     are exactly what the direct front-end calls would return (same padding,
     same bucketing, bit-identical values), so correctness is inherited from
     the tested batch path.
+
+    Partial-failure contract: ``flush`` solves one kind at a time and
+    DELIVERS each kind the moment it completes (into an internal ready
+    buffer). If a later kind's batch raises, the exception propagates, but
+    the completed kinds' results are NOT discarded — they are returned by
+    the next successful ``flush`` without being re-solved, and only the
+    failing kind's queue stays populated for retry.
 
     Args:
       mesh / mesh_axis: optional ``jax.sharding.Mesh``
@@ -104,6 +173,8 @@ class SolverEngine:
         self._next_ticket = 0
         self._maxflow: list[tuple[int, Any]] = []
         self._assignment: list[tuple[int, Any]] = []
+        # results of kinds that completed before a later kind's flush raised
+        self._ready: dict[int, Any] = {}
 
     def _ticket(self) -> int:
         t, self._next_ticket = self._next_ticket, self._next_ticket + 1
@@ -112,16 +183,12 @@ class SolverEngine:
     def submit_maxflow(self, problem) -> int:
         """Queue a ``GridProblem`` (any (H, W)); returns its ticket.
 
-        Malformed requests are rejected HERE (before a ticket is issued) so
-        ``flush`` cannot be wedged by a bad queue entry.
+        Malformed requests — wrong shapes, non-numeric dtypes, negative or
+        non-finite capacities — are rejected HERE (before a ticket is
+        issued, ``validate_grid_problem``) so ``flush`` cannot be wedged by
+        a bad queue entry.
         """
-        cap, cs, ct = (jnp.asarray(a) for a in problem)
-        if cap.ndim != 3 or cap.shape[0] != 4 or cs.shape != ct.shape \
-                or cs.shape != cap.shape[1:]:
-            raise ValueError(
-                f"malformed grid problem: cap_nbr {cap.shape}, "
-                f"cap_src {cs.shape}, cap_sink {ct.shape}; expected "
-                f"(4, H, W) / (H, W) / (H, W)")
+        problem = validate_grid_problem(problem)
         t = self._ticket()
         self._maxflow.append((t, problem))
         return t
@@ -129,14 +196,11 @@ class SolverEngine:
     def submit_assignment(self, w) -> int:
         """Queue a square integer weight matrix (any n); returns its ticket.
 
-        Rejects non-square or non-integer matrices at submit time.
+        Rejects non-square or non-integer matrices at submit time
+        (``validate_assignment_matrix`` — same reject-before-ticket
+        contract as ``submit_maxflow``).
         """
-        w = np.asarray(w)
-        if w.ndim != 2 or w.shape[0] != w.shape[1] \
-                or not np.issubdtype(w.dtype, np.integer):
-            raise ValueError(
-                f"malformed assignment request: need a square integer "
-                f"matrix, got shape {w.shape} dtype {w.dtype}")
+        w = validate_assignment_matrix(w)
         t = self._ticket()
         self._assignment.append((t, w))
         return t
@@ -145,32 +209,84 @@ class SolverEngine:
         """Number of queued, unsolved requests."""
         return len(self._maxflow) + len(self._assignment)
 
-    def flush(self) -> dict[int, Any]:
+    # ---- the synchronous core the async scheduler drives ----------------
+
+    def prepare(self, kind: str, payloads: list) -> list[PreparedBucket]:
+        """HOST stage: pad-and-bucket ``payloads`` of one kind.
+
+        Pure host work (``repro.core.batch.prepare_*_buckets`` with this
+        engine's bucket/mesh config) — the stage the async scheduler
+        overlaps with the previous batch's device solve.
+        """
+        if kind == "maxflow":
+            return prepare_maxflow_buckets(
+                payloads, bucket=self.bucket, mesh=self.mesh,
+                mesh_axis=self.mesh_axis)
+        if kind == "assignment":
+            return prepare_assignment_buckets(
+                payloads, bucket=self.bucket, mesh=self.mesh,
+                mesh_axis=self.mesh_axis)
+        raise ValueError(f"unknown request kind: {kind!r}")
+
+    def solve_prepared(self, prep: PreparedBucket, *,
+                       compact: bool | None = None) \
+            -> tuple[dict[int, Any], BucketStats]:
+        """DEVICE stage: dispatch one prepared bucket.
+
+        ``compact=None`` uses the engine default; the async scheduler
+        overrides it per dispatch (adaptive masked-vs-compacted choice).
+        Returns ``({payload_position: result}, BucketStats)``.
+        """
+        compact = self.compact if compact is None else compact
+        if prep.kind == "maxflow":
+            return solve_prepared_maxflow(
+                prep, compact=compact, mesh=self.mesh,
+                mesh_axis=self.mesh_axis, **self.maxflow_kw)
+        return solve_prepared_assignment(
+            prep, compact=compact, mesh=self.mesh,
+            mesh_axis=self.mesh_axis, **self.assignment_kw)
+
+    def solve_requests(self, kind: str, payloads: list, *,
+                       compact: bool | None = None,
+                       stats_out: list | None = None) -> list:
+        """Solve ``payloads`` of one kind; results in input order.
+
+        ``prepare`` + ``solve_prepared`` composed back-to-back — the
+        blocking path ``flush`` uses, and the poison-isolation fallback of
+        the async scheduler (one payload at a time).
+        """
+        results = [None] * len(payloads)
+        for prep in self.prepare(kind, payloads):
+            out, stats = self.solve_prepared(prep, compact=compact)
+            if stats_out is not None:
+                stats_out.append(stats)
+            for i, r in out.items():
+                results[i] = r
+        return results
+
+    def flush(self, *, stats_out: list | None = None) -> dict[int, Any]:
         """Solve every pending request; returns ``{ticket: result}``.
 
-        One batched dispatch per (kind, bucket shape); the queue is emptied
-        even if a request did not converge (check ``result.converged``).
+        One batched dispatch per (kind, bucket shape); a flushed kind's
+        queue is emptied even if a request did not converge (check
+        ``result.converged``). An empty queue returns ``{}`` without
+        dispatching. If one kind's batch raises, kinds that already
+        completed stay delivered (returned by the next flush, not
+        re-solved) and only the failing kind remains queued.
         """
-        from repro.core.batch import (solve_assignment_batch,
-                                      solve_maxflow_batch)
-        out: dict[int, Any] = {}
         if self._maxflow:
             tickets, probs = zip(*self._maxflow)
-            res = solve_maxflow_batch(
-                list(probs), bucket=self.bucket, compact=self.compact,
-                mesh=self.mesh, mesh_axis=self.mesh_axis, **self.maxflow_kw)
-            out.update(zip(tickets, res))
+            res = self.solve_requests("maxflow", list(probs),
+                                      stats_out=stats_out)
+            self._ready.update(zip(tickets, res))
+            self._maxflow.clear()
         if self._assignment:
             tickets, ws = zip(*self._assignment)
-            res = solve_assignment_batch(
-                list(ws), bucket=self.bucket, compact=self.compact,
-                mesh=self.mesh, mesh_axis=self.mesh_axis,
-                **self.assignment_kw)
-            out.update(zip(tickets, res))
-        # clear only after BOTH kinds solved: a raise above (e.g. a malformed
-        # request) leaves the queues intact so no ticket is silently dropped
-        self._maxflow.clear()
-        self._assignment.clear()
+            res = self.solve_requests("assignment", list(ws),
+                                      stats_out=stats_out)
+            self._ready.update(zip(tickets, res))
+            self._assignment.clear()
+        out, self._ready = self._ready, {}
         return out
 
 

@@ -1,0 +1,196 @@
+"""Serving metrics: EWMA stats registry + the scheduler's telemetry surface.
+
+Two consumers share this module:
+
+* the ADAPTIVE DISPATCH policy of ``repro.serve.scheduler`` — an EWMA over
+  the per-bucket convergence spread (``repro.core.batch.BucketStats.
+  spread``) decides masked vs compacted dispatch per kind, and
+* OPERATORS — ``SchedulerMetrics.snapshot()`` exposes queue depth, batch
+  occupancy, ticket-latency percentiles (p50/p99), flush-trigger counts,
+  and per-driver dispatch counts as one plain dict.
+
+Everything here is thread-safe (one lock per registry): submit paths, the
+scheduler thread, and the lane threads all record concurrently. Nothing
+imports jax — metrics stay importable (and testable) without touching
+device state.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Any
+
+import numpy as np
+
+
+class Ewma:
+    """Exponentially-weighted moving average; ``None`` until first update.
+
+    ``alpha`` is the weight of the NEW observation (0.25 ~= averaging over
+    the last ~4 batches) — recent convergence behaviour should dominate a
+    serving stream whose difficulty drifts.
+    """
+
+    def __init__(self, alpha: float = 0.25):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        self.alpha = alpha
+        self._value: float | None = None
+
+    def update(self, x: float) -> float:
+        v = self._value
+        self._value = float(x) if v is None else \
+            self.alpha * float(x) + (1.0 - self.alpha) * v
+        return self._value
+
+    @property
+    def value(self) -> float | None:
+        return self._value
+
+
+class LatencyWindow:
+    """Ring buffer of recent ticket latencies (ms) -> p50/p99 percentiles.
+
+    A bounded window (default: the last 1024 tickets), not a full history:
+    serving percentiles should describe CURRENT behaviour, and the buffer
+    must not grow with uptime.
+    """
+
+    def __init__(self, maxlen: int = 1024):
+        self._buf: collections.deque[float] = collections.deque(maxlen=maxlen)
+
+    def record(self, latency_ms: float) -> None:
+        self._buf.append(float(latency_ms))
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    def percentiles(self, qs=(50.0, 99.0)) -> dict[str, float | None]:
+        if not self._buf:
+            return {f"p{q:g}": None for q in qs}
+        arr = np.asarray(self._buf)
+        return {f"p{q:g}": float(np.percentile(arr, q)) for q in qs}
+
+
+class ConvergenceStats:
+    """Per-kind EWMA registry over observed batch convergence spread.
+
+    The adaptive-dispatch signal: ``spread`` of a bucket is
+    ``(rounds_max - rounds_min) / max(rounds_max, 1)`` over its real
+    instances (``BucketStats.spread``). A stream whose spread EWMA is high
+    is ragged — stragglers dominate masked dispatches and early-exit
+    compaction pays; a low EWMA means the batch converges together and the
+    single-dispatch masked driver wins (benchmarks/RESULTS_compaction.md).
+    """
+
+    def __init__(self, alpha: float = 0.25):
+        self._alpha = alpha
+        self._lock = threading.Lock()
+        self._spread: dict[str, Ewma] = {}
+        self._occupancy: dict[str, Ewma] = {}
+
+    def observe(self, kind: str, *, spread: float,
+                occupancy: float | None = None) -> None:
+        with self._lock:
+            self._spread.setdefault(kind, Ewma(self._alpha)).update(spread)
+            if occupancy is not None:
+                self._occupancy.setdefault(
+                    kind, Ewma(self._alpha)).update(occupancy)
+
+    def spread(self, kind: str) -> float | None:
+        with self._lock:
+            e = self._spread.get(kind)
+            return None if e is None else e.value
+
+    def occupancy(self, kind: str) -> float | None:
+        with self._lock:
+            e = self._occupancy.get(kind)
+            return None if e is None else e.value
+
+
+class SchedulerMetrics:
+    """The async scheduler's full telemetry surface (thread-safe).
+
+    Counters: submitted / completed / failed / cancelled tickets; flushes
+    by trigger (``size`` | ``deadline`` | ``manual`` | ``drain``);
+    dispatches by ``(kind, driver)`` where driver is ``masked`` or
+    ``compacted``. Gauges: current queue depth. Distributions: ticket
+    latency (submit -> future resolution) percentiles, batch-occupancy
+    EWMA (real instances / max_batch), convergence-spread EWMA, and the
+    compacted driver's live-count decay (via
+    ``repro.core.solver_loop.trace_cycles``).
+    """
+
+    def __init__(self, *, latency_window: int = 1024, ewma_alpha: float = 0.25):
+        self._lock = threading.Lock()
+        self.convergence = ConvergenceStats(alpha=ewma_alpha)
+        self._latency = LatencyWindow(maxlen=latency_window)
+        self._counts = collections.Counter()
+        self._flushes = collections.Counter()
+        self._dispatches = collections.Counter()
+        self._queue_depth = 0
+        self._compact_cycles = 0
+        self._compact_live_total = 0
+
+    # ---- recording hooks (submit path / scheduler / lanes) --------------
+
+    def record_submit(self, queue_depth: int) -> None:
+        with self._lock:
+            self._counts["submitted"] += 1
+            self._queue_depth = queue_depth
+
+    def record_flush(self, trigger: str, queue_depth: int) -> None:
+        with self._lock:
+            self._flushes[trigger] += 1
+            self._queue_depth = queue_depth
+
+    def record_dispatch(self, kind: str, *, compact: bool, spread: float,
+                        occupancy: float) -> None:
+        with self._lock:
+            self._dispatches[(kind, "compacted" if compact else "masked")] += 1
+        self.convergence.observe(kind, spread=spread, occupancy=occupancy)
+
+    def record_done(self, latency_ms: float, *, ok: bool = True) -> None:
+        with self._lock:
+            self._counts["completed" if ok else "failed"] += 1
+            if ok:
+                self._latency.record(latency_ms)
+
+    def record_cancelled(self, n: int = 1) -> None:
+        with self._lock:
+            self._counts["cancelled"] += n
+
+    def record_live_trace(self, cycle: int, n_live: int) -> None:
+        """Per-cycle live-count sample from the compacted driver."""
+        with self._lock:
+            self._compact_cycles += 1
+            self._compact_live_total += n_live
+
+    # ---- reading --------------------------------------------------------
+
+    def dispatch_count(self, kind: str, driver: str) -> int:
+        with self._lock:
+            return self._dispatches[(kind, driver)]
+
+    def snapshot(self) -> dict[str, Any]:
+        """One coherent dict of every counter/gauge/percentile (copies)."""
+        with self._lock:
+            snap = {
+                "queue_depth": self._queue_depth,
+                "tickets": dict(self._counts),
+                "flushes_by_trigger": dict(self._flushes),
+                "dispatches": {f"{k}:{d}": n for (k, d), n
+                               in self._dispatches.items()},
+                "latency_ms": self._latency.percentiles(),
+                "latency_samples": len(self._latency),
+                "compact_cycles": self._compact_cycles,
+                "compact_live_mean": (
+                    self._compact_live_total / self._compact_cycles
+                    if self._compact_cycles else None),
+            }
+        snap["spread_ewma"] = {
+            k: self.convergence.spread(k) for k in ("maxflow", "assignment")}
+        snap["occupancy_ewma"] = {
+            k: self.convergence.occupancy(k)
+            for k in ("maxflow", "assignment")}
+        return snap

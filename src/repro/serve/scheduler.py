@@ -1,0 +1,415 @@
+"""Async serving scheduler: background-flush SolverEngine with futures.
+
+The blocking serve path (``repro.serve.engine.SolverEngine``) solves
+nothing until a caller flushes, and while it pads the next queue the
+device idles. This module puts a SCHEDULER in front of the same
+synchronous core:
+
+* ``AsyncSolverEngine.submit_maxflow`` / ``submit_assignment`` may be
+  called from any thread and return ``concurrent.futures.Future``s;
+* a background scheduler thread flushes a kind when its queue reaches
+  ``max_batch`` (size trigger) or the oldest request's deadline expires
+  (deadline trigger, per-request ``deadline_ms`` with ``max_delay_ms`` as
+  the default) — no manual flush ever needed;
+* flushed batches run through a TWO-STAGE pipeline: the scheduler thread
+  does the host-side pad-and-bucket (``SolverEngine.prepare``) of batch
+  *k+1* while a lane thread runs the device solve
+  (``SolverEngine.solve_prepared``) of batch *k*. Lanes are
+  double-buffered (``n_lanes``, bounded hand-off queues — one staged and
+  one in-flight dispatch per lane) and, on a multi-device mesh, dispatch
+  onto disjoint sub-meshes (``repro.launch.mesh.scheduler_lanes``) so two
+  batches overlap on hardware;
+* per dispatch the scheduler picks the MASKED or COMPACTED solver-loop
+  driver adaptively from the EWMA of recent batches' convergence spread
+  (``repro.serve.metrics.ConvergenceStats``; ``dispatch=`` forces either
+  driver), and
+* every result is bit-identical to the synchronous ``flush()`` of the
+  same queue — the scheduler only decides WHEN and ON WHICH DEVICES the
+  tested batch path runs, never what it computes
+  (tests/test_scheduler.py).
+
+Failure semantics: requests are validated BEFORE a future exists (same
+contract as the sync engine); if a batched dispatch still fails, the lane
+falls back to solving that batch's requests one at a time so a poisoned
+request fails ONLY its own future. ``close(drain=True)`` (also the
+context-manager exit) solves everything pending before returning;
+``close(drain=False)`` cancels queued futures (``Future.cancelled()``)
+and only finishes batches already in flight. Neither path can hang on a
+quiet queue.
+"""
+from __future__ import annotations
+
+import collections
+import itertools
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Any
+
+from repro.core.solver_loop import trace_cycles
+from repro.launch.mesh import scheduler_lanes
+from repro.serve.engine import (SolverEngine, validate_assignment_matrix,
+                                validate_grid_problem)
+from repro.serve.metrics import SchedulerMetrics
+
+KINDS = ("maxflow", "assignment")
+_SENTINEL = object()
+
+
+@dataclass
+class _Request:
+    ticket: int
+    kind: str
+    payload: Any
+    future: Future
+    submit_t: float
+    deadline_t: float
+
+
+@dataclass
+class _Lane:
+    """One dispatch lane: its own SolverEngine (sub-mesh) + worker thread."""
+    engine: SolverEngine
+    work: "queue.Queue[Any]" = field(
+        default_factory=lambda: queue.Queue(maxsize=1))
+    thread: threading.Thread | None = None
+
+
+def choose_driver(spread_ewma: float | None, n_real: int, *,
+                  threshold: float, min_batch: int,
+                  forced: str = "adaptive") -> bool:
+    """Masked or compacted for the next dispatch? Returns ``compact``.
+
+    ``forced`` short-circuits (``"masked"`` / ``"compacted"`` — the
+    override knob). Adaptively, compaction is chosen once the observed
+    convergence-spread EWMA clears ``threshold`` AND the bucket is big
+    enough to amortize the host-driven gather/scatter loop
+    (``min_batch``); with no history yet (EWMA ``None``) the masked
+    single-dispatch driver is the safe default.
+    """
+    if forced == "masked":
+        return False
+    if forced == "compacted":
+        return True
+    if forced != "adaptive":
+        raise ValueError(
+            f"dispatch must be 'adaptive' | 'masked' | 'compacted', "
+            f"got {forced!r}")
+    return (spread_ewma is not None and spread_ewma > threshold
+            and n_real >= min_batch)
+
+
+class AsyncSolverEngine:
+    """Background-flush solver serving: submit from any thread, get futures.
+
+    Args:
+      max_batch: size trigger — a kind flushes as soon as ``max_batch`` of
+        its requests are queued (also the per-dispatch batch cap, so one
+        flush of a long queue becomes several max-occupancy batches).
+      max_delay_ms: default deadline budget — a request never waits longer
+        than this for batch-mates before its kind is flushed
+        (per-request ``deadline_ms`` overrides).
+      dispatch: ``"adaptive"`` (default) picks masked vs compacted per
+        dispatch from the convergence-spread EWMA; ``"masked"`` /
+        ``"compacted"`` force one driver (the override knob).
+      spread_threshold / min_compact_batch / ewma_alpha: adaptive-policy
+        tuning — see ``choose_driver`` / ``repro.serve.metrics``.
+      n_lanes: dispatch lanes for the host/device pipeline (2 =
+        double-buffered). On a mesh with >= n_lanes devices each lane owns
+        a disjoint sub-mesh (``repro.launch.mesh.scheduler_lanes``).
+      mesh / mesh_axis / bucket / maxflow_kw / assignment_kw: forwarded to
+        the per-lane ``SolverEngine`` cores (same semantics as the
+        blocking engine; docs/batching.md).
+      metrics: optional ``SchedulerMetrics`` to record into (one is
+        created otherwise; read it via ``.metrics.snapshot()``).
+
+    Results are bit-identical to ``SolverEngine.flush()`` of the same
+    request stream chunked the same way — and, transitively, to a loop of
+    single solves (tests/test_scheduler.py).
+    """
+
+    def __init__(self, *, max_batch: int = 16, max_delay_ms: float = 50.0,
+                 dispatch: str = "adaptive", spread_threshold: float = 0.25,
+                 min_compact_batch: int = 4, ewma_alpha: float = 0.25,
+                 n_lanes: int = 2, mesh=None, mesh_axis: str | None = None,
+                 bucket: str = "max", maxflow_kw: dict | None = None,
+                 assignment_kw: dict | None = None,
+                 metrics: SchedulerMetrics | None = None):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_delay_ms <= 0:
+            raise ValueError(
+                f"max_delay_ms must be > 0, got {max_delay_ms}")
+        choose_driver(None, 0, threshold=spread_threshold,
+                      min_batch=min_compact_batch, forced=dispatch)
+        self.max_batch = max_batch
+        self.max_delay_ms = max_delay_ms
+        self.dispatch = dispatch
+        self.spread_threshold = spread_threshold
+        self.min_compact_batch = min_compact_batch
+        self.metrics = metrics or SchedulerMetrics(ewma_alpha=ewma_alpha)
+
+        self._lanes = [
+            _Lane(engine=SolverEngine(
+                mesh=lane_mesh, mesh_axis=mesh_axis, bucket=bucket,
+                maxflow_kw=maxflow_kw, assignment_kw=assignment_kw))
+            for lane_mesh in scheduler_lanes(mesh, mesh_axis, n_lanes)]
+        self._rr = itertools.cycle(range(len(self._lanes)))
+
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._pending: dict[str, collections.deque[_Request]] = {
+            k: collections.deque() for k in KINDS}
+        self._next_ticket = 0
+        self._manual = False
+        self._closing = False
+        self._closed = False
+
+        self._scheduler = threading.Thread(
+            target=self._scheduler_loop, name="solver-scheduler",
+            daemon=True)
+        self._scheduler.start()
+        for i, lane in enumerate(self._lanes):
+            lane.thread = threading.Thread(
+                target=self._lane_loop, args=(lane,),
+                name=f"solver-lane-{i}", daemon=True)
+            lane.thread.start()
+
+    # ---- submission ------------------------------------------------------
+
+    def _submit(self, kind: str, payload, deadline_ms: float | None) -> Future:
+        now = time.monotonic()
+        budget = self.max_delay_ms if deadline_ms is None else deadline_ms
+        if budget <= 0:
+            raise ValueError(f"deadline_ms must be > 0, got {deadline_ms}")
+        fut: Future = Future()
+        with self._cond:
+            if self._closing:
+                raise RuntimeError(
+                    "AsyncSolverEngine is closed; no new submissions")
+            req = _Request(ticket=self._next_ticket, kind=kind,
+                           payload=payload, future=fut, submit_t=now,
+                           deadline_t=now + budget / 1e3)
+            self._next_ticket += 1
+            self._pending[kind].append(req)
+            self.metrics.record_submit(self._depth_locked())
+            self._cond.notify_all()
+        return fut
+
+    def submit_maxflow(self, problem, *,
+                       deadline_ms: float | None = None) -> Future:
+        """Queue a grid max-flow request; returns a Future of its result.
+
+        Validation (shapes, dtypes, non-negative finite capacities) happens
+        HERE, synchronously — a rejected request raises ``ValueError`` and
+        no future is created (``repro.serve.engine.validate_grid_problem``).
+        ``future.result()`` is the same ``GridFlowResult`` the blocking
+        engine would return for this request.
+        """
+        return self._submit("maxflow", validate_grid_problem(problem),
+                            deadline_ms)
+
+    def submit_assignment(self, w, *,
+                          deadline_ms: float | None = None) -> Future:
+        """Queue an assignment request; returns a Future of its result."""
+        return self._submit("assignment", validate_assignment_matrix(w),
+                            deadline_ms)
+
+    def flush_now(self) -> None:
+        """Manual trigger: flush everything pending without waiting.
+
+        A no-op on an empty queue — the flag must not stay armed, or the
+        NEXT lone submission would dispatch as a singleton batch instead
+        of waiting for batch-mates.
+        """
+        with self._cond:
+            if self._depth_locked() > 0:
+                self._manual = True
+                self._cond.notify_all()
+
+    def pending(self) -> int:
+        """Requests queued but not yet handed to a dispatch lane."""
+        with self._lock:
+            return self._depth_locked()
+
+    def _depth_locked(self) -> int:
+        return sum(len(q) for q in self._pending.values())
+
+    # ---- scheduler thread: triggers + the host half of the pipeline -----
+
+    def _next_deadline_locked(self) -> float | None:
+        ds = [r.deadline_t for q in self._pending.values() for r in q]
+        return min(ds) if ds else None
+
+    def _trigger_ready_locked(self, now: float) -> bool:
+        if self._manual or self._closing:
+            return self._depth_locked() > 0
+        if any(len(q) >= self.max_batch for q in self._pending.values()):
+            return True
+        nd = self._next_deadline_locked()
+        return nd is not None and nd <= now
+
+    def _pop_batches_locked(self, now: float) -> list[tuple]:
+        """Pop every batch whose trigger fired: ``(kind, reqs, trigger)``.
+
+        Size triggers pop exactly ``max_batch`` oldest requests (FIFO =
+        ticket order); a deadline/manual/drain trigger flushes the whole
+        kind in ``max_batch``-sized chunks so one expired request cannot
+        strand its batch-mates.
+        """
+        batches = []
+        for kind in KINDS:
+            q = self._pending[kind]
+            while len(q) >= self.max_batch:
+                batches.append((kind, [q.popleft()
+                                       for _ in range(self.max_batch)],
+                                "size"))
+            if q and (self._closing or self._manual
+                      or min(r.deadline_t for r in q) <= now):
+                trigger = ("drain" if self._closing else
+                           "manual" if self._manual else "deadline")
+                while q:
+                    chunk = [q.popleft()
+                             for _ in range(min(self.max_batch, len(q)))]
+                    batches.append((kind, chunk, trigger))
+        self._manual = False
+        return batches
+
+    def _scheduler_loop(self) -> None:
+        while True:
+            with self._cond:
+                now = time.monotonic()
+                while not self._trigger_ready_locked(now):
+                    if self._closing:      # closing + nothing pending: done
+                        return
+                    nd = self._next_deadline_locked()
+                    self._cond.wait(
+                        timeout=None if nd is None else max(nd - now, 0.0))
+                    now = time.monotonic()
+                batches = self._pop_batches_locked(now)
+                depth = self._depth_locked()
+            for kind, reqs, trigger in batches:
+                self.metrics.record_flush(trigger, depth)
+                # drop requests whose future the caller already cancelled
+                live = [r for r in reqs
+                        if r.future.set_running_or_notify_cancel()]
+                self.metrics.record_cancelled(len(reqs) - len(live))
+                if not live:
+                    continue
+                lane = self._lanes[next(self._rr)]
+                try:
+                    # HOST stage: pad-and-bucket (overlaps the device solve
+                    # of whatever this lane is already running)
+                    preps = lane.engine.prepare(
+                        kind, [r.payload for r in live])
+                except Exception as e:        # can't prepare: fail the batch
+                    for r in live:
+                        r.future.set_exception(e)
+                        self.metrics.record_done(0.0, ok=False)
+                    continue
+                # blocks when the lane already holds a staged batch —
+                # bounded hand-off, one staged + one in-flight per lane
+                lane.work.put((kind, live, preps))
+
+    # ---- lane threads: the device half of the pipeline -------------------
+
+    def _lane_loop(self, lane: _Lane) -> None:
+        while True:
+            item = lane.work.get()
+            if item is _SENTINEL:
+                return
+            kind, reqs, preps = item
+            try:
+                self._solve_batch(lane, kind, reqs, preps)
+            except Exception:
+                try:
+                    self._isolate_failures(lane, kind, reqs)
+                except Exception as e:
+                    # last resort: the lane thread must survive and every
+                    # future must resolve, or shutdown could hang
+                    for r in reqs:
+                        if not r.future.done():
+                            self.metrics.record_done(0.0, ok=False)
+                            r.future.set_exception(e)
+
+    def _solve_batch(self, lane: _Lane, kind: str, reqs: list[_Request],
+                     preps: list) -> None:
+        results: dict[int, Any] = {}
+        for prep in preps:
+            compact = choose_driver(
+                self.metrics.convergence.spread(kind),
+                len(prep.idxs), threshold=self.spread_threshold,
+                min_batch=self.min_compact_batch, forced=self.dispatch)
+            with trace_cycles(self.metrics.record_live_trace):
+                out, stats = lane.engine.solve_prepared(
+                    prep, compact=compact)
+            self.metrics.record_dispatch(
+                kind, compact=compact, spread=stats.spread,
+                occupancy=stats.n_real / self.max_batch)
+            results.update(out)
+        now = time.monotonic()
+        for i, r in enumerate(reqs):
+            # metrics BEFORE resolution: a caller waiting on result() may
+            # read snapshot() the instant the future resolves
+            self.metrics.record_done((now - r.submit_t) * 1e3)
+            r.future.set_result(results[i])
+
+    def _isolate_failures(self, lane: _Lane, kind: str,
+                          reqs: list[_Request]) -> None:
+        """Batched dispatch failed: re-solve one request at a time.
+
+        A poisoned request must fail ONLY its own future — everything else
+        in its batch still gets a result (solved solo through the same
+        tested path, so values are unchanged; only dispatch granularity
+        differs).
+        """
+        for r in reqs:
+            if r.future.done():          # already resolved before the raise
+                continue
+            try:
+                [res] = lane.engine.solve_requests(kind, [r.payload])
+            except Exception as e:
+                self.metrics.record_done(0.0, ok=False)
+                r.future.set_exception(e)
+            else:
+                self.metrics.record_done(
+                    (time.monotonic() - r.submit_t) * 1e3)
+                r.future.set_result(res)
+
+    # ---- shutdown --------------------------------------------------------
+
+    def close(self, *, drain: bool = True) -> None:
+        """Stop the scheduler. Idempotent; never hangs.
+
+        ``drain=True`` solves everything still queued (futures resolve
+        normally) before threads are joined. ``drain=False`` cancels
+        queued requests' futures (``Future.cancelled()`` becomes True);
+        batches already handed to a lane still complete.
+        """
+        with self._cond:
+            if self._closed:
+                return
+            self._closed = True
+            self._closing = True            # submit() now refuses
+            if not drain:
+                dropped = [r for k in KINDS for r in self._pending[k]]
+                for k in KINDS:
+                    self._pending[k].clear()
+            self._cond.notify_all()
+        if not drain:
+            for r in dropped:
+                if r.future.cancel():
+                    self.metrics.record_cancelled()
+        self._scheduler.join()
+        for lane in self._lanes:
+            lane.work.put(_SENTINEL)
+        for lane in self._lanes:
+            lane.thread.join()
+
+    def __enter__(self) -> "AsyncSolverEngine":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close(drain=exc_type is None)

@@ -1,0 +1,156 @@
+"""SolverEngine edge cases: the synchronous serving core's contracts.
+
+What's under test (repro.serve.engine):
+
+* submit-time validation rejects malformed VALUES, not just shapes —
+  negative / non-finite / non-numeric capacities never get a ticket;
+* ``flush()`` on an empty queue returns ``{}`` without dispatching;
+* tickets stay globally ordered across interleaved submit/flush rounds
+  and mixed kinds, and every flush returns exactly its round's tickets;
+* partial-failure delivery: if one kind's batch raises, kinds that
+  already completed are NOT re-solved on retry — their results are
+  delivered by the next flush and only the failing kind stays queued.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.serve.engine as engine_mod
+from repro.core.maxflow.grid import GridProblem
+from repro.core.maxflow.ref import random_grid_problem
+from repro.serve.engine import (SolverEngine, validate_assignment_matrix,
+                                validate_grid_problem)
+
+
+def _prob(rng, h=6, w=6):
+    return GridProblem(*map(jnp.asarray, random_grid_problem(rng, h, w)))
+
+
+# ---------------------------------------------------------- validation
+
+def test_submit_maxflow_rejects_bad_values_before_ticket():
+    engine = SolverEngine()
+    good = _prob(np.random.default_rng(0))
+    neg = GridProblem(good.cap_nbr, -good.cap_src, good.cap_sink)
+    with pytest.raises(ValueError, match="negative"):
+        engine.submit_maxflow(neg)
+    nan = GridProblem(good.cap_nbr,
+                      jnp.full_like(good.cap_src, jnp.nan), good.cap_sink)
+    with pytest.raises(ValueError, match="non-finite"):
+        engine.submit_maxflow(nan)
+    boolean = GridProblem(jnp.zeros((4, 6, 6), jnp.bool_),
+                          good.cap_src, good.cap_sink)
+    with pytest.raises(ValueError, match="non-numeric"):
+        engine.submit_maxflow(boolean)
+    # the reject-before-ticket contract: nothing was queued, and the next
+    # good submit gets ticket 0 (no ticket was burned on a rejection)
+    assert engine.pending() == 0
+    assert engine.submit_maxflow(good) == 0
+
+
+def test_validators_canonicalize_good_requests():
+    rng = np.random.default_rng(1)
+    p = validate_grid_problem(_prob(rng))
+    assert isinstance(p, GridProblem)
+    # integer capacities are fine (float sums over them stay exact)
+    ints = GridProblem(jnp.ones((4, 3, 3), jnp.int32),
+                       jnp.ones((3, 3), jnp.int32),
+                       jnp.ones((3, 3), jnp.int32))
+    validate_grid_problem(ints)
+    w = validate_assignment_matrix([[1, 2], [3, 4]])
+    assert w.shape == (2, 2) and np.issubdtype(w.dtype, np.integer)
+    with pytest.raises(ValueError, match="malformed assignment"):
+        validate_assignment_matrix(np.ones((2, 2)))          # float
+
+
+# ---------------------------------------------------------- empty / mixed
+
+def test_flush_empty_queue_returns_empty_dict():
+    engine = SolverEngine()
+    assert engine.flush() == {}
+    assert engine.flush() == {}          # idempotent, still no dispatch
+
+
+def test_mixed_kind_queue_with_one_kind_empty():
+    rng = np.random.default_rng(2)
+    engine = SolverEngine()
+    t0 = engine.submit_maxflow(_prob(rng))
+    out = engine.flush()                 # assignment queue empty
+    assert sorted(out) == [t0] and bool(out[t0].converged)
+
+    t1 = engine.submit_assignment(rng.integers(0, 9, (4, 4)))
+    out = engine.flush()                 # maxflow queue empty
+    assert sorted(out) == [t1] and bool(out[t1].converged)
+
+
+def test_ticket_ordering_across_interleaved_rounds():
+    """Tickets are globally monotonic across kinds AND flush rounds, and
+    each flush returns exactly the tickets submitted since the last one."""
+    rng = np.random.default_rng(3)
+    engine = SolverEngine()
+    seen: list[int] = []
+    for _ in range(3):
+        round_tickets = [engine.submit_maxflow(_prob(rng)),
+                         engine.submit_assignment(rng.integers(0, 9, (4, 4))),
+                         engine.submit_maxflow(_prob(rng))]
+        assert round_tickets == sorted(round_tickets)
+        assert seen == [] or min(round_tickets) > max(seen)
+        out = engine.flush()
+        assert sorted(out) == round_tickets
+        seen += round_tickets
+    assert seen == list(range(9))
+
+
+# ---------------------------------------------------------- partial failure
+
+def test_completed_kind_delivers_when_other_kind_fails(monkeypatch):
+    """The flush-order bugfix: max-flow solves first; if the assignment
+    batch then raises, the max-flow results must survive — delivered by
+    the retry flush WITHOUT re-solving — and only assignment stays queued."""
+    rng = np.random.default_rng(4)
+    engine = SolverEngine()
+    tf = engine.submit_maxflow(_prob(rng))
+    ta = engine.submit_assignment(rng.integers(0, 9, (5, 5)))
+
+    maxflow_calls = []
+    real_maxflow = engine_mod.solve_prepared_maxflow
+
+    def counting_maxflow(prep, **kw):
+        maxflow_calls.append(prep)
+        return real_maxflow(prep, **kw)
+
+    def assignment_boom(prep, **kw):
+        raise RuntimeError("transient assignment failure")
+
+    monkeypatch.setattr(engine_mod, "solve_prepared_maxflow",
+                        counting_maxflow)
+    monkeypatch.setattr(engine_mod, "solve_prepared_assignment",
+                        assignment_boom)
+
+    with pytest.raises(RuntimeError, match="transient"):
+        engine.flush()
+    # max-flow completed and left the queue; assignment stayed for retry
+    assert engine.pending() == 1 and len(maxflow_calls) == 1
+
+    from repro.core.batch import solve_prepared_assignment
+    monkeypatch.setattr(engine_mod, "solve_prepared_assignment",
+                        solve_prepared_assignment)
+    out = engine.flush()
+    # both tickets delivered; the max-flow batch was NOT re-solved
+    assert sorted(out) == [tf, ta] and len(maxflow_calls) == 1
+    assert bool(out[tf].converged) and bool(out[ta].converged)
+
+
+def test_flush_stats_out_reports_buckets():
+    rng = np.random.default_rng(5)
+    engine = SolverEngine()
+    engine.submit_maxflow(_prob(rng))
+    engine.submit_maxflow(_prob(rng))
+    engine.submit_assignment(rng.integers(0, 9, (4, 4)))
+    stats = []
+    out = engine.flush(stats_out=stats)
+    assert len(out) == 3 and len(stats) == 2
+    kinds = {s.kind: s for s in stats}
+    assert kinds["maxflow"].n_real == 2
+    assert kinds["assignment"].n_real == 1
+    assert all(0.0 <= s.spread <= 1.0 for s in stats)
