@@ -8,6 +8,28 @@ import jax.numpy as jnp
 import numpy as np
 
 
+# --------------------------------------------------------------- registry
+#
+# ``benchmarks.run`` enumerates this table instead of hardcoding choices.
+# ``kind=`` ties a bench to a solver kind from ``repro.core.kinds``; the
+# harness asserts every registered kind has a tied bench, so adding a
+# solver kind without a benchmark fails loudly instead of silently
+# shipping unmeasured.
+BENCHES: dict = {}
+KIND_BENCHES: dict = {}  # solver kind name -> bench name
+
+
+def bench(name, *, kind=None):
+    def deco(fn):
+        if name in BENCHES:
+            raise ValueError(f"duplicate bench name {name!r}")
+        BENCHES[name] = fn
+        if kind is not None:
+            KIND_BENCHES[kind] = name
+        return fn
+    return deco
+
+
 def _time(fn, *args, reps=3, **kw):
     fn(*args, **kw)  # compile
     t0 = time.perf_counter()
@@ -17,6 +39,7 @@ def _time(fn, *args, reps=3, **kw):
     return (time.perf_counter() - t0) / reps * 1e6  # us
 
 
+@bench("maxflow", kind="maxflow")
 def bench_maxflow(rows, repeats=2):
     """Paper §4: push-relabel on grid graphs (vision-scale sizes)."""
     from repro.core.maxflow.grid import GridProblem, maxflow_grid
@@ -35,6 +58,7 @@ def bench_maxflow(rows, repeats=2):
                      f"{hw*hw*int(res.rounds)/us:.1f}"))
 
 
+@bench("batched")
 def bench_batched(rows, repeats=2):
     """Batched multi-instance engine vs vmap-of-single (instances/sec).
 
@@ -100,6 +124,7 @@ def bench_batched(rows, repeats=2):
                      f"mean_rounds={float(jnp.mean(res.rounds)):.0f}"))
 
 
+@bench("sharded")
 def bench_sharded(rows, repeats=2):
     """Batch-axis sharding over the device mesh: instances/sec vs devices.
 
@@ -153,6 +178,7 @@ def bench_sharded(rows, repeats=2):
                      f"speedup_vs_unsharded={us0 / us:.2f}x"))
 
 
+@bench("compaction")
 def bench_compaction(rows, repeats=2):
     """Early-exit compaction vs the masked baseline (instances/sec).
 
@@ -208,6 +234,7 @@ def bench_compaction(rows, repeats=2):
                  f"speedup_vs_masked={us_m / us_c:.2f}x"))
 
 
+@bench("serving")
 def bench_serving(rows, repeats=2):
     """Blocking-flush vs async-pipelined serving (throughput + latency).
 
@@ -249,7 +276,7 @@ def bench_serving(rows, repeats=2):
         n = 0
         for lo in range(0, B, chunk):
             for p in probs[lo:lo + chunk]:
-                eng.submit_maxflow(p)
+                eng.submit("maxflow", p)
             n += len(eng.flush())
         assert n == B
 
@@ -258,7 +285,7 @@ def bench_serving(rows, repeats=2):
         with AsyncSolverEngine(max_batch=chunk, max_delay_ms=10_000.0,
                                dispatch=dispatch, spread_threshold=0.15,
                                min_compact_batch=4) as eng:
-            futs = [eng.submit_maxflow(p) for p in probs]
+            futs = [eng.submit("maxflow", p) for p in probs]
             for f in futs:
                 f.result(timeout=600)
             metrics = eng.metrics
@@ -293,6 +320,7 @@ def bench_serving(rows, repeats=2):
                      + extra))
 
 
+@bench("assignment", kind="assignment")
 def bench_assignment(rows, repeats=2):
     """Paper §6: n<=30, costs<=100, ~1/20 s on a GTX 560 Ti."""
     from repro.core.assignment.cost_scaling import solve_assignment
@@ -310,6 +338,49 @@ def bench_assignment(rows, repeats=2):
                          f"rounds={int(res.rounds)}" + note))
 
 
+@bench("matching", kind="matching")
+def bench_matching(rows, repeats=2):
+    """Bipartite maximum-cardinality matching (BFS augmenting rounds).
+
+    Single-instance sizes vs the host Hopcroft-Karp oracle (the device
+    path must match its cardinality exactly — asserted, not just timed),
+    then the batched masked/compacted drivers, then the Pallas frontier
+    backend end-to-end (interpret on CPU: correctness-scale timing)."""
+    from repro.core.matching import match_bipartite, match_bipartite_batch
+    from repro.core.matching.ref import hopcroft_karp, random_bipartite
+    rng = np.random.default_rng(0)
+    for n in (64, 128, 256):
+        adj = jnp.asarray(random_bipartite(rng, n, n, p=4.0 / n))
+        res = match_bipartite(adj)
+        us = _time(match_bipartite, adj, reps=repeats)
+        t0 = time.perf_counter()
+        hk_card = hopcroft_karp(np.asarray(adj))[2]
+        hk_us = (time.perf_counter() - t0) * 1e6
+        assert int(res.cardinality) == int(hk_card)
+        rows.append((f"matching_{n}x{n}", us,
+                     f"card={int(res.cardinality)};"
+                     f"rounds={int(res.rounds)};hk_host_us={hk_us:.0f}"))
+    B, n = 32, 64
+    adjs = jnp.asarray(np.stack(
+        [random_bipartite(rng, n, n, p=6.0 / n) for _ in range(B)]))
+    res = match_bipartite_batch(adjs)
+    us_m = _time(match_bipartite_batch, adjs, reps=repeats)
+    rows.append((f"matching_masked_B{B}_n{n}", us_m,
+                 f"inst_per_s={B / us_m * 1e6:.1f};"
+                 f"rounds_min={int(jnp.min(res.rounds))};"
+                 f"rounds_max={int(jnp.max(res.rounds))}"))
+    us_c = _time(match_bipartite_batch, adjs, compact=True, reps=repeats)
+    rows.append((f"matching_compact_B{B}_n{n}", us_c,
+                 f"inst_per_s={B / us_c * 1e6:.1f};"
+                 f"speedup_vs_masked={us_m / us_c:.2f}x"))
+    adj32 = jnp.asarray(random_bipartite(rng, 32, 32, p=0.15))
+    us_x = _time(match_bipartite, adj32, reps=repeats)
+    us_p = _time(match_bipartite, adj32, backend="pallas", reps=repeats)
+    rows.append(("matching_pallas_interp_32x32", us_p,
+                 f"xla_us={us_x:.0f};interpret-mode frontier kernel"))
+
+
+@bench("refine_ops")
 def bench_refine_ops(rows, repeats=2):
     """Operation-count scaling (the paper analyzes O(n^2 m) op bounds)."""
     from repro.core.assignment.cost_scaling import solve_assignment
@@ -325,6 +396,7 @@ def bench_refine_ops(rows, repeats=2):
                      f"bound_n2m={n**2 * n * n}" + growth))
 
 
+@bench("routing")
 def bench_routing(rows, repeats=2):
     """Flow router vs top-k: drops, balance, overhead (MoE integration)."""
     from repro.core.routing import auction_route, topk_route
@@ -343,6 +415,7 @@ def bench_routing(rows, repeats=2):
                      f"load_cv={load.std()/load.mean():.3f}"))
 
 
+@bench("kernels")
 def bench_kernels(rows, repeats=2):
     """Bidding kernel tile sweep (interpret on CPU: correctness-scale)."""
     from repro.kernels.bidding.kernel import bidding
@@ -362,6 +435,7 @@ def bench_kernels(rows, repeats=2):
                      f"vmem_per_step_KiB={vmem_kib:.0f}"))
 
 
+@bench("flash")
 def bench_flash_kernel(rows, repeats=2):
     """Flash-attention Pallas kernel vs jnp flash path (interpret on CPU)."""
     from repro.kernels.flash_attention.kernel import flash_attention_fwd

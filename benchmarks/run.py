@@ -8,6 +8,13 @@ Usage::
 
     python -m benchmarks.run [bench] [--repeats N] [--csv PATH]
 
+The bench table is not hardcoded here: ``benchmarks.bench_flow`` registers
+each benchmark with the ``@bench(name, kind=...)`` decorator and this
+harness enumerates that registry. Benches tied to a solver kind are
+cross-checked against ``repro.core.kinds.registered_kinds()`` — registering
+a new solver kind without a benchmark makes every ``benchmarks.run``
+invocation fail loudly instead of silently shipping the kind unmeasured.
+
 Unknown bench names are rejected with the list of available benches
 (previously they silently printed an empty CSV). ``--csv PATH`` writes the
 same CSV to a file so callers (CI's artifact step) don't have to depend on
@@ -18,24 +25,18 @@ from __future__ import annotations
 import argparse
 import pathlib
 
-from benchmarks.bench_flow import (bench_assignment, bench_batched,
-                                   bench_compaction, bench_flash_kernel,
-                                   bench_kernels, bench_maxflow,
-                                   bench_refine_ops, bench_routing,
-                                   bench_serving, bench_sharded)
+from benchmarks.bench_flow import BENCHES, KIND_BENCHES
 
-BENCHES = {
-    "maxflow": bench_maxflow,
-    "batched": bench_batched,
-    "sharded": bench_sharded,
-    "compaction": bench_compaction,
-    "serving": bench_serving,
-    "assignment": bench_assignment,
-    "refine_ops": bench_refine_ops,
-    "routing": bench_routing,
-    "kernels": bench_kernels,
-    "flash": bench_flash_kernel,
-}
+
+def _check_kind_coverage() -> None:
+    """Every registered solver kind must have a bench tied to it."""
+    from repro.core.kinds import registered_kinds
+    missing = [k for k in registered_kinds() if k not in KIND_BENCHES]
+    if missing:
+        raise SystemExit(
+            f"solver kinds without a benchmark: {', '.join(missing)} — "
+            f"tie one in with @bench(name, kind=...) in "
+            f"benchmarks/bench_flow.py")
 
 
 def main(argv: list[str] | None = None) -> None:
@@ -55,6 +56,7 @@ def main(argv: list[str] | None = None) -> None:
         help="also write the CSV to PATH (parent dirs created; output is "
              "still printed to stdout)")
     args = parser.parse_args(argv)
+    _check_kind_coverage()
 
     rows: list[tuple] = []
     for name, fn in BENCHES.items():

@@ -57,11 +57,8 @@ def main():
                            min_compact_batch=4) as eng:
         futures = []
         for i, (kind, payload) in enumerate(stream):
-            if kind == "maxflow":
-                fut = eng.submit_maxflow(payload, deadline_ms=DEADLINE_MS)
-            else:
-                fut = eng.submit_assignment(payload,
-                                            deadline_ms=DEADLINE_MS)
+            # one generic entry point for every registered solver kind
+            fut = eng.submit(kind, payload, deadline_ms=DEADLINE_MS)
             futures.append((kind, fut))
             if i % 8 == 7:
                 time.sleep(0.02)           # burst boundary: client breathes

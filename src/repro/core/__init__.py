@@ -1,4 +1,4 @@
-"""Public surface of the solver core (the paper's two algorithms + engine).
+"""Public surface of the solver core (the paper's algorithms + engine).
 
 The paper's primary contribution — synchronous data-parallel flow and
 matching solvers — lives here:
@@ -8,26 +8,42 @@ matching solvers — lives here:
   stacks with per-instance convergence.
 * ``solve_assignment`` — cost-scaling max-weight perfect matching
   (paper §5), ``(n, n)`` or ``(B, n, n)``.
-* ``solve_maxflow_batch`` / ``solve_assignment_batch`` — the pad-and-bucket
-  front end for ragged collections (``repro.core.batch``).
+* ``match_bipartite`` / ``match_bipartite_batch`` — maximum-cardinality
+  bipartite matching via lock-free BFS augmenting-path phases
+  (``repro.core.matching``; Deveci et al., arXiv:1303.1379).
+* ``SolverKind`` / ``register_kind`` / ``get_kind`` / ``registered_kinds``
+  — the solver-kind registry (``repro.core.kinds``): the one seam the
+  batch front end, the serving engines, and the benchmark runner dispatch
+  through; register a kind once and every layer above serves it
+  (docs/solvers.md).
+* ``solve_batch`` / ``prepare_buckets`` / ``solve_prepared`` — the generic
+  pad-and-bucket front end for ragged collections of ANY registered kind
+  (``repro.core.batch``); ``solve_maxflow_batch`` /
+  ``solve_assignment_batch`` are its historical per-kind spellings.
 * ``freeze`` — the per-instance liveness select behind batched solving
   (``repro.core.masking``).
 * ``LoopSpec`` / ``run_masked`` / ``run_compacted`` / ``trace_cycles`` —
   the unified solver-loop runtime (``repro.core.solver_loop``): masked
   iteration, early-exit compaction, and the per-cycle live-count trace
-  hook, shared by both solvers.
-* ``BucketStats`` — per-dispatch occupancy/round-spread telemetry
-  (``stats_out=`` on the batch front ends; the signal behind
-  ``repro.serve.scheduler``'s adaptive dispatch).
+  hook, shared by every kind.
+* ``PreparedBucket`` / ``BucketStats`` — the host-stage hand-off and the
+  per-dispatch occupancy/round-spread telemetry (``stats_out=`` on the
+  batch front ends; the signal behind ``repro.serve.scheduler``'s
+  adaptive dispatch).
 
 Every entry point accepts ``mesh=`` (device-mesh batch sharding) and the
 batched ones ``compact=`` (early-exit compaction); see docs/batching.md.
 """
 from repro.core.assignment.cost_scaling import (AssignmentResult,
                                                solve_assignment)
-from repro.core.batch import (BucketStats, solve_assignment_batch,
-                              solve_maxflow_batch)
+from repro.core.batch import (BucketStats, PreparedBucket, prepare_buckets,
+                              solve_assignment_batch, solve_batch,
+                              solve_maxflow_batch, solve_prepared)
+from repro.core.kinds import (SolverKind, get_kind, register_kind,
+                              registered_kinds)
 from repro.core.masking import freeze
+from repro.core.matching import (MatchingResult, match_bipartite,
+                                 match_bipartite_batch)
 from repro.core.maxflow.grid import (GridFlowResult, GridProblem,
                                      maxflow_grid, maxflow_grid_batch)
 from repro.core.solver_loop import (LoopSpec, run_compacted, run_masked,
@@ -39,13 +55,24 @@ __all__ = [
     "GridFlowResult",
     "GridProblem",
     "LoopSpec",
+    "MatchingResult",
+    "PreparedBucket",
+    "SolverKind",
     "freeze",
+    "get_kind",
+    "match_bipartite",
+    "match_bipartite_batch",
     "maxflow_grid",
     "maxflow_grid_batch",
+    "prepare_buckets",
+    "register_kind",
+    "registered_kinds",
     "run_compacted",
     "run_masked",
     "solve_assignment",
     "solve_assignment_batch",
+    "solve_batch",
     "solve_maxflow_batch",
+    "solve_prepared",
     "trace_cycles",
 ]

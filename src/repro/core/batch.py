@@ -2,12 +2,13 @@
 
 The paper's solvers are throughput devices — the CUDA implementations
 amortize kernel-launch cost over thousands of nodes; this module amortizes
-*dispatch* cost over many instances. ``solve_maxflow_batch`` /
-``solve_assignment_batch`` take ragged collections of problems, pad each to
-a bucket shape (zero-capacity padding for grids, a bonus-shifted block for
-cost matrices — both value-preserving, see the helpers), stack every bucket
-into one leading batch axis, and run ONE jitted dispatch per bucket
-(``maxflow_grid_batch`` / the batch-polymorphic ``solve_assignment``).
+*dispatch* cost over many instances. ``solve_batch(kind, payloads)`` takes
+a ragged collection of problems of one registered solver kind
+(``repro.core.kinds``), pads each to a bucket shape (value-preserving,
+see the per-kind pad helpers), stacks every bucket into one leading batch
+axis, and runs ONE jitted dispatch per bucket. The historical per-kind
+entry points — ``solve_maxflow_batch`` / ``solve_assignment_batch`` — are
+thin wrappers over the same generic path.
 
 Per-instance convergence inside a batch is handled by the solvers' liveness
 masks: a converged instance is frozen via selects while the rest keep
@@ -24,30 +25,35 @@ Results are always returned in input order, cropped back to original sizes.
 Sharding (``mesh=``): pass a ``jax.sharding.Mesh``
 (``repro.launch.mesh.make_solver_mesh``) and each bucket's batch axis is
 partitioned across the mesh under ``shard_map``. Buckets whose size is not a
-multiple of the shard count are padded with INERT instances (zero-capacity
-grids / zero-weight matrices) that converge immediately and are dropped
-before returning — so ragged queues of any size shard cleanly, and results
-still bit-match the unsharded path (tests/test_shard.py). See
-docs/batching.md for the full semantics.
+multiple of the shard count are padded with INERT instances (each kind's
+``inert_problem`` — an instance that converges immediately and cannot
+perturb batch-mates) that are dropped before returning — so ragged queues
+of any size shard cleanly, and results still bit-match the unsharded path
+(tests/test_shard.py). See docs/batching.md for the full semantics.
 
-Two-stage split (the serving scheduler's pipeline hook): each ``solve_*``
-front end is the composition of a HOST stage and a DEVICE stage —
+Two-stage split (the serving scheduler's pipeline hook): each solve front
+end is the composition of a HOST stage and a DEVICE stage —
 
-  * ``prepare_maxflow_buckets`` / ``prepare_assignment_buckets`` — pure
-    host work (bucketing, padding, stacking) producing ``PreparedBucket``s;
-  * ``solve_prepared_maxflow`` / ``solve_prepared_assignment`` — the jitted
-    dispatch plus result cropping, returning per-request results AND a
-    ``BucketStats`` record (batch occupancy, per-instance round spread,
-    convergence counts).
+  * ``prepare_buckets(kind, payloads)`` — pure host work (bucketing,
+    padding, stacking) producing ``PreparedBucket``s;
+  * ``solve_prepared(prep)`` — the jitted dispatch plus result cropping,
+    returning per-request results AND a ``BucketStats`` record (batch
+    occupancy, per-instance round spread, convergence counts).
 
 ``repro.serve.scheduler`` overlaps the host stage of batch *k+1* with the
 device stage of batch *k* and feeds the stats into its adaptive
 masked-vs-compacted dispatch policy; the blocking front ends below expose
 the same stats through ``stats_out=``.
+
+This module also REGISTERS the paper's two kinds (``"maxflow"`` and
+``"assignment"``) with the solver-kind registry at the bottom of the file;
+the third kind, ``"matching"``, registers itself in
+``repro.core.matching`` — see docs/solvers.md for the walkthrough of
+adding a kind.
 """
 from __future__ import annotations
 
-from typing import Any, Iterable, NamedTuple, Sequence
+from typing import Any, Callable, Iterable, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -55,15 +61,18 @@ import numpy as np
 
 from repro.core.assignment.cost_scaling import (AssignmentResult,
                                                solve_assignment)
+from repro.core.kinds import SolverKind, get_kind, register_kind
 from repro.core.maxflow.grid import (GridFlowResult, GridProblem,
                                      maxflow_grid_batch)
 
 __all__ = [
     "pad_grid_problem", "stack_grid_problems", "pad_cost_matrix",
-    "inert_grid_problem", "solve_maxflow_batch", "solve_assignment_batch",
-    "PreparedBucket", "BucketStats", "prepare_maxflow_buckets",
-    "solve_prepared_maxflow", "prepare_assignment_buckets",
-    "solve_prepared_assignment",
+    "inert_grid_problem", "inert_cost_matrix", "solve_maxflow_batch",
+    "solve_assignment_batch", "PreparedBucket", "BucketStats",
+    "prepare_buckets", "solve_prepared", "solve_batch",
+    "prepare_maxflow_buckets", "solve_prepared_maxflow",
+    "prepare_assignment_buckets", "solve_prepared_assignment",
+    "validate_grid_problem", "validate_assignment_matrix",
 ]
 
 
@@ -92,28 +101,33 @@ def _shard_pad(n_real: int, mesh, mesh_axis) -> int:
 class PreparedBucket(NamedTuple):
     """One bucket's host-stage output: padded, stacked, dispatch-ready.
 
-    ``idxs`` are positions in the original request sequence (results from
-    the device stage are keyed by them); ``shapes`` are the requests'
-    original shapes for cropping; ``originals`` holds the raw cost matrices
-    for assignment buckets (weights are recomputed on unpadded values) and
-    is ``None`` for max-flow. ``n_pad`` counts trailing inert instances
-    appended for mesh-shard divisibility — the stacked batch is
+    ``kind`` names the registered solver kind (``repro.core.kinds``) whose
+    ``solve_prepared`` consumes this bucket — the registry, not this
+    module, is the source of truth for which kinds exist
+    (``registered_kinds()``). ``idxs`` are positions in the original
+    request sequence (results from the device stage are keyed by them);
+    ``shapes`` are the requests' original shapes for cropping;
+    ``originals`` holds raw per-request payloads when a kind's device
+    stage needs unpadded values (the assignment kind recomputes weights on
+    them) and is ``None`` otherwise. ``n_pad`` counts trailing inert
+    instances appended for mesh-shard divisibility — the stacked batch is
     ``len(idxs) + n_pad`` instances, reals first.
     """
 
-    kind: str                    # "maxflow" | "assignment"
-    shape: tuple                 # bucket shape: (H, W) grids, (m,) matrices
+    kind: str                    # a registered solver kind name
+    shape: tuple                 # bucket shape, e.g. (H, W) / (m,) / (nl, nr)
     idxs: tuple[int, ...]        # request positions, in submission order
     shapes: tuple                # original per-request shapes
-    stacked: Any                 # GridProblem of (B,4,H,W)... or (B,m,m)
-    originals: tuple | None      # assignment: original (n,n) matrices
+    stacked: Any                 # batch-leading stacked problem pytree
+    originals: tuple | None      # raw payloads, when the kind needs them
     n_pad: int                   # trailing inert shard-padding instances
 
 
 class BucketStats(NamedTuple):
     """What one batched dispatch observed — the adaptive-dispatch signal.
 
-    ``spread`` is the normalized per-instance round raggedness
+    ``kind`` is the registered solver kind the bucket was dispatched
+    through. ``spread`` is the normalized per-instance round raggedness
     ``(rounds_max - rounds_min) / max(rounds_max, 1)`` over REAL instances:
     ~0 when the whole bucket converges together (masked dispatch is
     optimal), toward 1 when stragglers dominate (early-exit compaction
@@ -146,7 +160,149 @@ def _stats(kind: str, prep: PreparedBucket, rounds, converged,
         rounds_mean=float(r.mean()), n_converged=int(c.sum()))
 
 
+def _make_buckets(kind: str, shapes: Sequence[tuple], *, bucket: str,
+                  mesh, mesh_axis,
+                  build: Callable) -> list[PreparedBucket]:
+    """The shared host-stage loop every kind's ``prepare_buckets`` drives.
+
+    Groups request positions by bucket shape (per-axis max under
+    ``"max"``, per-axis pow2 under ``"pow2"``, identity under
+    ``"exact"``), computes the inert shard padding, and calls
+    ``build(bucket_shape, idxs, n_pad) -> (stacked, originals)`` for the
+    kind-specific pad/stack work.
+    """
+    if not shapes:
+        return []
+    ndim = len(shapes[0])
+    max_shape = tuple(max(s[d] for s in shapes) for d in range(ndim))
+    groups: dict[tuple, list[int]] = {}
+    for i, s in enumerate(shapes):
+        groups.setdefault(_bucket_shape(s, bucket, max_shape), []).append(i)
+    out = []
+    for bshape, idxs in groups.items():
+        n_pad = _shard_pad(len(idxs), mesh, mesh_axis)
+        stacked, originals = build(bshape, idxs, n_pad)
+        out.append(PreparedBucket(
+            kind=kind, shape=bshape, idxs=tuple(idxs),
+            shapes=tuple(shapes[i] for i in idxs), stacked=stacked,
+            originals=originals, n_pad=n_pad))
+    return out
+
+
+# ------------------------------------------------- generic (registry) API
+
+def prepare_buckets(kind: str, payloads: Sequence, *, bucket: str = "max",
+                    mesh=None,
+                    mesh_axis: str | None = None) -> list[PreparedBucket]:
+    """HOST stage for any registered kind: bucket, pad, and stack a ragged
+    queue of ``kind`` payloads (dispatches to the kind's registration —
+    unknown kinds raise ``ValueError`` naming the registered ones)."""
+    return get_kind(kind).prepare_buckets(payloads, bucket=bucket,
+                                          mesh=mesh, mesh_axis=mesh_axis)
+
+
+def solve_prepared(prep: PreparedBucket, *, compact: bool = False,
+                   mesh=None, mesh_axis: str | None = None,
+                   **solver_kw) -> tuple[dict[int, Any], BucketStats]:
+    """DEVICE stage for any registered kind: one batched dispatch of a
+    prepared bucket, routed through ``prep.kind``'s registration. Returns
+    ``({payload_position: result}, BucketStats)``."""
+    return get_kind(prep.kind).solve_prepared(
+        prep, compact=compact, mesh=mesh, mesh_axis=mesh_axis, **solver_kw)
+
+
+def solve_batch(
+    kind: str,
+    payloads: Iterable,
+    *,
+    bucket: str = "max",
+    compact: bool = False,
+    mesh=None,
+    mesh_axis: str | None = None,
+    stats_out: list | None = None,
+    **solver_kw,
+) -> list:
+    """Solve many (possibly ragged) instances of one registered kind.
+
+    The generic front end every kind rides: ``prepare_buckets`` +
+    ``solve_prepared`` composed back-to-back, one jitted dispatch per
+    bucket, results in input order cropped back to original shapes.
+
+    Args:
+      kind: a registered solver kind name (``registered_kinds()``);
+        unknown kinds raise ``ValueError`` naming the registered ones.
+      payloads: the kind's problem instances (any mix of shapes).
+      bucket: ``"max"`` | ``"pow2"`` | ``"exact"`` — see the module
+        docstring / docs/batching.md for the dispatch-count vs
+        padding-waste trade-off.
+      compact: early-exit compaction per bucket (``repro.core.solver_loop``;
+        results bit-match the masked default, see docs/batching.md).
+      mesh / mesh_axis: optional device mesh — each bucket's batch axis is
+        sharded across it, padded with the kind's inert instances so every
+        bucket splits evenly (dropped before returning).
+      stats_out: optional list; one ``BucketStats`` per dispatched bucket
+        is appended (occupancy + round-spread telemetry for the serving
+        scheduler's adaptive dispatch).
+      **solver_kw: forwarded to the kind's solver (``backend=``,
+        ``max_rounds=``, ...).
+    """
+    payloads = list(payloads)
+    k = get_kind(kind)
+    if not payloads:
+        return []
+    results: list = [None] * len(payloads)
+    for prep in k.prepare_buckets(payloads, bucket=bucket, mesh=mesh,
+                                  mesh_axis=mesh_axis):
+        out, stats = k.solve_prepared(prep, compact=compact, mesh=mesh,
+                                      mesh_axis=mesh_axis, **solver_kw)
+        if stats_out is not None:
+            stats_out.append(stats)
+        for i, r in out.items():
+            results[i] = r
+    return results
+
+
 # ---------------------------------------------------------------- max-flow
+
+def validate_grid_problem(problem) -> GridProblem:
+    """Canonicalize + validate a max-flow request (shapes, dtypes, values).
+
+    The ``"maxflow"`` kind's registered validator — the submit-time
+    contract shared by ``SolverEngine`` and ``AsyncSolverEngine``:
+    malformed requests are rejected BEFORE a ticket or future exists, so a
+    queue can never hold an entry that would wedge a batched flush. Checks
+    shape ((4, H, W) / (H, W) / (H, W)), numeric dtype (bool and object
+    arrays are refused), and values — capacities must be finite and
+    non-negative (a negative or NaN capacity breaks the residual-graph
+    invariants silently rather than loudly).
+    """
+    try:
+        cap, cs, ct = (jnp.asarray(a) for a in problem)
+    except (TypeError, ValueError) as e:
+        raise ValueError(f"malformed grid problem: not array-like ({e})")
+    if cap.ndim != 3 or cap.shape[0] != 4 or cs.shape != ct.shape \
+            or cs.shape != cap.shape[1:]:
+        raise ValueError(
+            f"malformed grid problem: cap_nbr {cap.shape}, "
+            f"cap_src {cs.shape}, cap_sink {ct.shape}; expected "
+            f"(4, H, W) / (H, W) / (H, W)")
+    for name, a in (("cap_nbr", cap), ("cap_src", cs), ("cap_sink", ct)):
+        if not (jnp.issubdtype(a.dtype, jnp.floating)
+                or jnp.issubdtype(a.dtype, jnp.integer)):
+            raise ValueError(
+                f"malformed grid problem: {name} has non-numeric dtype "
+                f"{a.dtype} (need integer or floating capacities)")
+        v = np.asarray(a)
+        if not np.all(np.isfinite(v)):
+            raise ValueError(
+                f"malformed grid problem: {name} contains non-finite "
+                f"capacities (NaN/inf)")
+        if np.any(v < 0):
+            raise ValueError(
+                f"malformed grid problem: {name} contains negative "
+                f"capacities (min={v.min()})")
+    return GridProblem(cap, cs, ct)
+
 
 def pad_grid_problem(problem: GridProblem, H: int, W: int) -> GridProblem:
     """Zero-capacity pad a grid-cut instance to (H, W).
@@ -197,7 +353,7 @@ def prepare_maxflow_buckets(
     mesh=None,
     mesh_axis: str | None = None,
 ) -> list[PreparedBucket]:
-    """HOST stage: bucket, pad, and stack a ragged max-flow queue.
+    """HOST stage of the ``"maxflow"`` kind: bucket, pad, and stack.
 
     Pure host/numpy + stacking work, no solver dispatch — this is the stage
     the async scheduler overlaps with the previous batch's device solve.
@@ -205,26 +361,16 @@ def prepare_maxflow_buckets(
     padded with inert instances to the mesh's shard count (if any).
     """
     problems = [GridProblem(*(jnp.asarray(a) for a in p)) for p in problems]
-    if not problems:
-        return []
     shapes = [tuple(p.cap_src.shape) for p in problems]
-    max_shape = (max(s[0] for s in shapes), max(s[1] for s in shapes))
 
-    buckets: dict[tuple, list[int]] = {}
-    for i, s in enumerate(shapes):
-        buckets.setdefault(_bucket_shape(s, bucket, max_shape), []).append(i)
-
-    out = []
-    for (H, W), idxs in buckets.items():
+    def build(bshape, idxs, n_pad):
+        H, W = bshape
         padded = [pad_grid_problem(problems[i], H, W) for i in idxs]
-        n_pad = _shard_pad(len(idxs), mesh, mesh_axis)
         padded += [inert_grid_problem(H, W)] * n_pad
-        out.append(PreparedBucket(
-            kind="maxflow", shape=(H, W), idxs=tuple(idxs),
-            shapes=tuple(shapes[i] for i in idxs),
-            stacked=stack_grid_problems(padded), originals=None,
-            n_pad=n_pad))
-    return out
+        return stack_grid_problems(padded), None
+
+    return _make_buckets("maxflow", shapes, bucket=bucket, mesh=mesh,
+                         mesh_axis=mesh_axis, build=build)
 
 
 def solve_prepared_maxflow(
@@ -236,7 +382,7 @@ def solve_prepared_maxflow(
     mesh_axis: str | None = None,
     **solver_kw,
 ) -> tuple[dict[int, GridFlowResult], BucketStats]:
-    """DEVICE stage: one batched dispatch of a prepared max-flow bucket.
+    """DEVICE stage of the ``"maxflow"`` kind: one batched dispatch.
 
     Returns ``({request_position: result}, BucketStats)`` — results are
     cropped back to each request's original (H, W), exactly as
@@ -267,56 +413,38 @@ def solve_maxflow_batch(
     problems: Iterable[GridProblem],
     *,
     bucket: str = "max",
-    backend: str = "xla",
     compact: bool = False,
     mesh=None,
     mesh_axis: str | None = None,
     stats_out: list | None = None,
     **solver_kw,
 ) -> list[GridFlowResult]:
-    """Solve many (possibly ragged) grid-cut instances in batched dispatches.
-
-    Args:
-      problems: iterable of ``GridProblem`` instances (any mix of shapes).
-      bucket: ``"max"`` | ``"pow2"`` | ``"exact"`` — see the module
-        docstring / docs/batching.md for the dispatch-count vs padding-waste
-        trade-off.
-      backend: solver round implementation (``"xla"`` | ``"multipush"`` |
-        ``"pallas"``), forwarded to ``maxflow_grid_batch``.
-      compact: early-exit compaction per bucket — converged instances are
-        dropped from the working set between jitted cycle segments instead
-        of being select-masked until the bucket's slowest instance finishes
-        (``repro.core.solver_loop``; results bit-match, see
-        docs/batching.md).
-      mesh / mesh_axis: optional device mesh — each bucket's batch axis is
-        sharded across it, with inert zero-capacity instances appended so
-        every bucket splits evenly (dropped before returning). With
-        ``compact=True``, compaction runs within each shard's lane.
-      stats_out: optional list; one ``BucketStats`` per dispatched bucket is
-        appended (occupancy + round-spread telemetry for the serving
-        scheduler's adaptive dispatch).
-      **solver_kw: forwarded to ``maxflow_grid_batch`` (e.g. ``max_rounds``).
-
-    Returns one ``GridFlowResult`` per instance in input order, with ``cut``
-    and state planes cropped back to the instance's original (H, W).
-    """
-    problems = list(problems)
-    if not problems:
-        return []
-    results: list[GridFlowResult | None] = [None] * len(problems)
-    for prep in prepare_maxflow_buckets(problems, bucket=bucket, mesh=mesh,
-                                        mesh_axis=mesh_axis):
-        out, stats = solve_prepared_maxflow(
-            prep, backend=backend, compact=compact, mesh=mesh,
-            mesh_axis=mesh_axis, **solver_kw)
-        if stats_out is not None:
-            stats_out.append(stats)
-        for i, r in out.items():
-            results[i] = r
-    return results  # type: ignore[return-value]
+    """Solve many ragged grid-cut instances — thin wrapper over
+    ``solve_batch("maxflow", ...)``; see it for the argument contract.
+    ``**solver_kw`` forwards to ``maxflow_grid_batch`` (``backend=``,
+    ``max_rounds=``, ...). Returns one ``GridFlowResult`` per instance in
+    input order, cropped back to the instance's original (H, W)."""
+    return solve_batch("maxflow", problems, bucket=bucket, compact=compact,
+                       mesh=mesh, mesh_axis=mesh_axis, stats_out=stats_out,
+                       **solver_kw)
 
 
 # -------------------------------------------------------------- assignment
+
+def validate_assignment_matrix(w) -> np.ndarray:
+    """Canonicalize + validate an assignment request (square int matrix).
+
+    The ``"assignment"`` kind's registered validator (same
+    reject-before-ticket contract as ``validate_grid_problem``).
+    """
+    w = np.asarray(w)
+    if w.ndim != 2 or w.shape[0] != w.shape[1] \
+            or not np.issubdtype(w.dtype, np.integer):
+        raise ValueError(
+            f"malformed assignment request: need a square integer "
+            f"matrix, got shape {w.shape} dtype {w.dtype}")
+    return w
+
 
 def pad_cost_matrix(w, m: int):
     """Pad an (n, n) integer weight matrix to (m, m), optimum-preserving.
@@ -343,6 +471,13 @@ def pad_cost_matrix(w, m: int):
     return jnp.asarray(out), bonus
 
 
+def inert_cost_matrix(m: int) -> jax.Array:
+    """A zero-weight (m, m) instance: any perfect matching is optimal, the
+    ε schedule collapses to one short ε=1 refine, and other instances never
+    observe it — the assignment kind's shard-padding filler."""
+    return jnp.zeros((m, m), jnp.int32)
+
+
 def prepare_assignment_buckets(
     costs: Sequence,
     *,
@@ -350,37 +485,23 @@ def prepare_assignment_buckets(
     mesh=None,
     mesh_axis: str | None = None,
 ) -> list[PreparedBucket]:
-    """HOST stage: bucket, bonus-pad, and stack a ragged assignment queue.
+    """HOST stage of the ``"assignment"`` kind: bucket, bonus-pad, stack.
 
     Mirrors ``prepare_maxflow_buckets``; ``originals`` keeps the unpadded
     matrices so the device stage can recompute matching weights on the REAL
     costs (the padded solve runs on bonus-shifted values).
     """
     costs = [np.asarray(w) for w in costs]
-    if not costs:
-        return []
-    sizes = [w.shape[-1] for w in costs]
-    max_n = max(sizes)
+    shapes = [(w.shape[-1],) for w in costs]
 
-    buckets: dict[tuple, list[int]] = {}
-    for i, n in enumerate(sizes):
-        buckets.setdefault(
-            _bucket_shape((n,), bucket, (max_n,)), []).append(i)
-
-    out = []
-    for (m,), idxs in buckets.items():
+    def build(bshape, idxs, n_pad):
+        (m,) = bshape
         mats = [pad_cost_matrix(costs[i], m)[0] for i in idxs]
-        # inert shard padding: zero-weight instances (any perfect matching
-        # is optimal; converges in one short eps=1 refine) that other
-        # instances never observe
-        n_pad = _shard_pad(len(idxs), mesh, mesh_axis)
-        mats += [jnp.zeros((m, m), jnp.int32)] * n_pad
-        out.append(PreparedBucket(
-            kind="assignment", shape=(m,), idxs=tuple(idxs),
-            shapes=tuple((sizes[i],) for i in idxs),
-            stacked=jnp.stack(mats),
-            originals=tuple(costs[i] for i in idxs), n_pad=n_pad))
-    return out
+        mats += [inert_cost_matrix(m)] * n_pad
+        return jnp.stack(mats), tuple(costs[i] for i in idxs)
+
+    return _make_buckets("assignment", shapes, bucket=bucket, mesh=mesh,
+                         mesh_axis=mesh_axis, build=build)
 
 
 def solve_prepared_assignment(
@@ -391,7 +512,7 @@ def solve_prepared_assignment(
     mesh_axis: str | None = None,
     **solver_kw,
 ) -> tuple[dict[int, AssignmentResult], BucketStats]:
-    """DEVICE stage: one batched dispatch of a prepared assignment bucket.
+    """DEVICE stage of the ``"assignment"`` kind: one batched dispatch.
 
     Returns ``({request_position: result}, BucketStats)``; weights are
     recomputed on the ORIGINAL (unpadded) costs, exactly as
@@ -428,24 +549,10 @@ def solve_assignment_batch(
     stats_out: list | None = None,
     **solver_kw,
 ) -> list[AssignmentResult]:
-    """Solve many (possibly ragged) assignment instances in batched dispatches.
-
-    Args:
-      costs: sequence of square integer weight matrices (ragged ``n`` fine).
-      bucket: ``"max"`` | ``"pow2"`` | ``"exact"`` bucketing of the matrix
-        sizes — see docs/batching.md.
-      compact: early-exit compaction per bucket — instances whose ε
-        schedule finished are dropped from the working set between jitted
-        cycle segments (``repro.core.solver_loop``; results bit-match the
-        masked path, see docs/batching.md).
-      mesh / mesh_axis: optional device mesh — each bucket's batch axis is
-        sharded across it, with inert zero-weight matrices appended so every
-        bucket splits evenly (dropped before returning). With
-        ``compact=True``, compaction runs within each shard's lane.
-      stats_out: optional list; one ``BucketStats`` per dispatched bucket is
-        appended (see ``solve_maxflow_batch``).
-      **solver_kw: forwarded to ``solve_assignment`` (``method=``,
-        ``max_rounds=``, ``backend=``, ...).
+    """Solve many ragged assignment instances — thin wrapper over
+    ``solve_batch("assignment", ...)``; see it for the argument contract.
+    ``**solver_kw`` forwards to ``solve_assignment`` (``method=``,
+    ``max_rounds=``, ``backend=``, ...).
 
     Same-bucket instances are padded with ``pad_cost_matrix``, stacked to
     (B, m, m), and solved by the batch-polymorphic ``solve_assignment`` in
@@ -459,17 +566,58 @@ def solve_assignment_batch(
     and they contribute 0 to ``weight`` rather than a clamped arbitrary
     entry.
     """
-    costs = list(costs)
-    if not costs:
-        return []
-    results: list[AssignmentResult | None] = [None] * len(costs)
-    for prep in prepare_assignment_buckets(costs, bucket=bucket, mesh=mesh,
-                                           mesh_axis=mesh_axis):
-        out, stats = solve_prepared_assignment(
-            prep, compact=compact, mesh=mesh, mesh_axis=mesh_axis,
-            **solver_kw)
-        if stats_out is not None:
-            stats_out.append(stats)
-        for i, r in out.items():
-            results[i] = r
-    return results  # type: ignore[return-value]
+    return solve_batch("assignment", costs, bucket=bucket, compact=compact,
+                       mesh=mesh, mesh_axis=mesh_axis, stats_out=stats_out,
+                       **solver_kw)
+
+
+# --------------------------------------------- registry: the builtin kinds
+
+def _maxflow_inert(shape: tuple) -> GridProblem:
+    return inert_grid_problem(*shape)
+
+
+def _maxflow_loop_spec(*, rounds_per_heuristic: int = 32,
+                       max_rounds: int = 100_000, bfs_max_iters: int = 0,
+                       backend: str = "xla"):
+    """The grid solver's cached ``LoopSpec`` factory (``maxflow_grid``
+    defaults); see ``repro.core.maxflow.grid``."""
+    from repro.core.maxflow.grid import _grid_spec
+    return _grid_spec(rounds_per_heuristic, max_rounds, bfs_max_iters,
+                      backend)
+
+
+def _assignment_inert(shape: tuple) -> jax.Array:
+    return inert_cost_matrix(*shape)
+
+
+def _assignment_loop_spec(*, method: str = "auction", alpha: int = 10,
+                          max_rounds: int = 200_000,
+                          rounds_per_heuristic: int = 16,
+                          use_price_update: bool = True,
+                          use_arc_fixing: bool = True,
+                          backend: str = "xla"):
+    """The assignment solver's cached ``LoopSpec`` factory
+    (``solve_assignment`` defaults); see ``repro.core.assignment``."""
+    from repro.core.assignment.cost_scaling import _assignment_spec
+    return _assignment_spec(method, alpha, max_rounds, rounds_per_heuristic,
+                            use_price_update, use_arc_fixing, backend)
+
+
+register_kind(SolverKind(
+    name="maxflow",
+    validate=validate_grid_problem,
+    inert_problem=_maxflow_inert,
+    prepare_buckets=prepare_maxflow_buckets,
+    solve_prepared=solve_prepared_maxflow,
+    loop_spec=_maxflow_loop_spec,
+))
+
+register_kind(SolverKind(
+    name="assignment",
+    validate=validate_assignment_matrix,
+    inert_problem=_assignment_inert,
+    prepare_buckets=prepare_assignment_buckets,
+    solve_prepared=solve_prepared_assignment,
+    loop_spec=_assignment_loop_spec,
+))

@@ -1,0 +1,116 @@
+"""Solver-kind registry: the one seam every layer above the kernels shares.
+
+The stack above the solvers — the ragged pad-and-bucket front end
+(``repro.core.batch``), the serving engine (``repro.serve.engine``), the
+async scheduler (``repro.serve.scheduler``), and the benchmark runner
+(``benchmarks.run``) — used to hardcode the paper's two solvers as
+``"maxflow" | "assignment"`` string branches.  This module replaces every
+one of those if/elif ladders with a REGISTRY: a solver kind registers once,
+under a string name, the five capabilities the upper layers need, and
+every layer dispatches through ``get_kind``.  Adding a new kind (the
+ROADMAP's refactor-test) is then ~one ``LoopSpec`` + kernels + one
+``register_kind`` call — ``repro.core.matching`` (GPU bipartite
+maximum-cardinality matching, Deveci et al., arXiv:1303.1379) is the third
+kind and the proof of the seam; see docs/solvers.md for the walkthrough.
+
+A ``SolverKind`` bundles:
+
+* ``validate(payload) -> payload`` — canonicalize + reject a malformed
+  request (raises ``ValueError``) BEFORE any ticket or future exists; the
+  submit-time contract of both serving engines.
+* ``inert_problem(shape) -> payload`` — an instance that converges
+  immediately and cannot perturb batch-mates; the pad-and-bucket front end
+  appends these so every bucket splits evenly across a device mesh.
+* ``prepare_buckets(payloads, *, bucket=, mesh=, mesh_axis=)`` — the HOST
+  stage: pad, bucket, and stack a ragged queue into ``PreparedBucket``s.
+* ``solve_prepared(prep, *, compact=, mesh=, mesh_axis=, **kw)`` — the
+  DEVICE stage: one batched dispatch of a prepared bucket, returning
+  ``({payload_position: result}, BucketStats)``.
+* ``loop_spec(**static_kw) -> LoopSpec`` — the kind's cached ``LoopSpec``
+  factory (``repro.core.solver_loop``); exposed so callers can drive the
+  loop runtime directly (and so the registry documents where the kind's
+  cycle actually lives).
+
+This module imports neither jax nor the solver packages at import time —
+the registry stays importable from anywhere (``repro.serve.metrics``
+included) without touching device state.  The built-in kinds register
+themselves when their home modules import; ``get_kind`` /
+``registered_kinds`` lazily import those modules so lookups work no matter
+which module the caller imported first.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Any, Callable, NamedTuple
+
+__all__ = ["SolverKind", "register_kind", "get_kind", "registered_kinds"]
+
+
+class SolverKind(NamedTuple):
+    """One solver kind's registration — see the module docstring."""
+
+    name: str
+    validate: Callable[[Any], Any]
+    inert_problem: Callable[..., Any]
+    prepare_buckets: Callable[..., list]
+    solve_prepared: Callable[..., tuple]
+    loop_spec: Callable[..., Any]
+
+
+_REGISTRY: dict[str, SolverKind] = {}
+
+# Modules that register the built-in kinds as an import side effect.  Lazy
+# (imported on first lookup, not at this module's import) so the registry
+# itself never drags jax in, and so circular imports cannot form: these
+# modules import ``repro.core.kinds`` at their top, we import them only
+# from inside a function call.
+_BUILTIN_MODULES = ("repro.core.batch", "repro.core.matching")
+
+
+def _ensure_builtins() -> None:
+    for mod in _BUILTIN_MODULES:
+        importlib.import_module(mod)
+
+
+def register_kind(kind: SolverKind) -> SolverKind:
+    """Register ``kind`` under ``kind.name``; returns it for convenience.
+
+    Duplicate names are an error (a silent overwrite would let two modules
+    fight over a name and make dispatch order-of-import dependent).  There
+    is deliberately no unregister: kinds are process-lifetime registrations,
+    like jax's pytree registrations.
+    """
+    if not kind.name or not isinstance(kind.name, str):
+        raise ValueError(f"kind name must be a non-empty string, "
+                         f"got {kind.name!r}")
+    if kind.name in _REGISTRY:
+        raise ValueError(
+            f"solver kind {kind.name!r} is already registered; kind names "
+            f"must be unique (registered: {sorted(_REGISTRY)})")
+    _REGISTRY[kind.name] = kind
+    return kind
+
+
+def get_kind(name: str) -> SolverKind:
+    """Look up a registered kind; unknown names raise naming the known ones."""
+    _ensure_builtins()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown solver kind {name!r}; registered kinds: "
+            f"{', '.join(registered_kinds())}") from None
+
+
+def registered_kinds(*, ensure: bool = True) -> tuple[str, ...]:
+    """Names of every registered kind, in registration order.
+
+    Built-in kinds (``maxflow``, ``assignment``, ``matching``) are ensured
+    first, so the result is stable regardless of which module the caller
+    imported.  Pass ``ensure=False`` to only PEEK at what has registered so
+    far without importing the (jax-heavy) builtin solver modules — the
+    jax-free metrics layer uses this.
+    """
+    if ensure:
+        _ensure_builtins()
+    return tuple(_REGISTRY)

@@ -1,0 +1,360 @@
+"""Bipartite maximum-cardinality matching via lock-free BFS phases — on TPU.
+
+The repo's THIRD solver kind, and the registry's proof-of-seam (ROADMAP:
+"a new kind should be ~one ``LoopSpec`` + kernels").  Adapted from the
+GPU augmenting-path matching of Deveci, Kaya, Uçar & Çatalyürek
+(arXiv:1303.1379): each phase grows an alternating-BFS forest from every
+unmatched row simultaneously, columns are claimed lock-free, and one
+vertex-disjoint augmenting path per tree is flipped.  Their CUDA kernels
+resolve column claims with atomics — thread order decides the winner; here
+the claim is a deterministic keyed minimum (smallest root label, then
+smallest row index), so a phase is a pure function of the instance and
+results bit-match across every batching/sharding/compaction layout.
+
+One heuristic cycle = one phase:
+
+1. FOREST — fixpoint of frontier expansion: labeled rows reach columns
+   over non-matching edges (``repro.kernels.frontier`` under
+   ``backend="pallas"``; a masked keyed-min reduction under ``"xla"``);
+   a newly claimed column records its claiming row as parent and, if
+   matched, labels its matched row with the same root.  Claims are
+   permanent within a phase — merging trees never shrinks the REACHABLE
+   set, so a free column is labeled iff an augmenting path exists (Berge).
+2. AUGMENT — each root selects its minimum labeled free column as the one
+   endpoint of its tree; the walks back along parent pointers are vertex-
+   disjoint (vertices carry exactly one root label, one endpoint per
+   root), so every path flips simultaneously with collision-free scatters.
+3. LIVENESS — ``progress`` records whether the phase augmented AND a free
+   row with edges remains; a phase that finds no endpoint certifies
+   maximality (no augmenting path exists), which is the convergence flag.
+
+Everything is shape-polymorphic over leading batch axes and PER-INSTANCE
+PURE (the fixpoint/walk ``while_loop`` predicates are shared across the
+batch but extra iterations are exact no-ops), so the solver plugs into the
+unified runtime of ``repro.core.solver_loop`` unchanged: masked iteration,
+early-exit compaction (``compact=True``), and mesh sharding all bit-match
+a loop of single-instance solves (tests/test_matching.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.solver_loop import LoopSpec, run_compacted, run_masked
+
+INF = jnp.int32(2 ** 30)
+
+
+class MatchingResult(NamedTuple):
+    match_row: jax.Array    # (..., nl) int32: matched col per row, -1 = free
+    match_col: jax.Array    # (..., nr) int32: matched row per col, -1 = free
+    cardinality: jax.Array  # (...,) int32 matching size
+    rounds: jax.Array       # (...,) BFS phases executed per instance
+    converged: jax.Array    # (...,) bool: True = maximum certified (Berge)
+
+
+class MatchState(NamedTuple):
+    """Per-instance solver carry (all leaves lead with the batch axes)."""
+
+    adj: jax.Array        # (..., nl, nr) bool adjacency (constant)
+    match_row: jax.Array  # (..., nl) int32
+    match_col: jax.Array  # (..., nr) int32
+    progress: jax.Array   # (...,) bool: an augmenting path may still exist
+
+
+def _has_free_work(adj, match_row):
+    """A free row with at least one edge remains (necessary for any
+    augmenting path — every augmenting path starts at such a row)."""
+    return jnp.any((match_row < 0) & jnp.any(adj, axis=-1), axis=-1)
+
+
+def _greedy_match(adj, match_row, match_col):
+    """Deterministic maximal greedy matching (the phase-0 init of Deveci
+    et al.): free rows propose their minimum free column; each column
+    accepts its minimum proposer; repeat to fixpoint.  Per-instance pure —
+    the shared ``changed`` predicate only adds exact no-op iterations."""
+    *_, nl, nr = adj.shape
+    rows_i = jnp.arange(nl, dtype=jnp.int32)
+    cols_i = jnp.arange(nr, dtype=jnp.int32)
+
+    def body(carry):
+        mr, mc, _ = carry
+        free_r = (mr < 0)[..., :, None]
+        free_c = (mc < 0)[..., None, :]
+        prop = jnp.min(jnp.where(adj & free_r & free_c, cols_i, INF),
+                       axis=-1)                          # (..., nl) col | INF
+        # each proposed column accepts its minimum proposing row
+        bids = jnp.where(prop[..., :, None] == cols_i,
+                         rows_i[:, None], INF)           # (..., nl, nr)
+        acc = jnp.min(bids, axis=-2)                     # (..., nr) row | INF
+        won = (prop < INF) & (jnp.take_along_axis(
+            acc, jnp.minimum(prop, nr - 1), axis=-1) == rows_i)
+        mr = jnp.where(won, prop, mr)
+        mc = jnp.where(acc < INF, acc, mc)
+        return mr, mc, jnp.any(won)
+
+    mr, mc, _ = jax.lax.while_loop(
+        lambda c: c[2], body, (match_row, match_col, jnp.bool_(True)))
+    return mr, mc
+
+
+def _expand(adj, root_row, match_row, backend: str):
+    """One frontier sweep: per column, (min root, claiming row) over labeled
+    rows adjacent via non-matching edges — the kernel's contract."""
+    if backend == "pallas":
+        from repro.kernels.frontier.ops import frontier_op
+        op = frontier_op
+        for _ in range(adj.ndim - 2):  # one vmap per leading batch axis
+            op = jax.vmap(op)
+        return op(adj, root_row, match_row)
+    *_, nl, nr = adj.shape
+    cols_i = jnp.arange(nr, dtype=jnp.int32)
+    rows2d = jax.lax.broadcasted_iota(jnp.int32, (nl, nr), 0)
+    cand = jnp.where(
+        adj & (root_row[..., :, None] < INF)
+        & (match_row[..., :, None] != cols_i),
+        root_row[..., :, None], INF)
+    min_root = jnp.min(cand, axis=-2)
+    claim = jnp.min(jnp.where(cand == min_root[..., None, :], rows2d, INF),
+                    axis=-2)
+    return min_root, claim
+
+
+def _phase(state: MatchState, backend: str) -> MatchState:
+    """One lock-free BFS augmenting-path phase (the LoopSpec cycle)."""
+    adj, match_row, match_col, _ = state
+    *_, nl, nr = adj.shape
+    rows_i = jnp.arange(nl, dtype=jnp.int32)
+    cols_i = jnp.arange(nr, dtype=jnp.int32)
+    batch = match_row.shape[:-1]
+
+    # ---- 1. alternating-BFS forest from every free row ------------------
+    root_row0 = jnp.where(match_row < 0, rows_i, INF)          # (..., nl)
+    root_col0 = jnp.full(batch + (nr,), INF)
+    parent0 = jnp.zeros(batch + (nr,), jnp.int32)
+
+    def bfs_body(carry):
+        root_row, root_col, parent, _ = carry
+        min_root, claim = _expand(adj, root_row, match_row, backend)
+        newly = (root_col >= INF) & (min_root < INF)
+        root_col = jnp.where(newly, min_root, root_col)
+        parent = jnp.where(newly, claim, parent)
+        # a labeled column's matched row inherits its root label
+        rc = jnp.take_along_axis(root_col, jnp.maximum(match_row, 0),
+                                 axis=-1)                      # (..., nl)
+        row_new = (match_row >= 0) & (root_row >= INF) & (rc < INF)
+        root_row = jnp.where(row_new, rc, root_row)
+        return (root_row, root_col, parent,
+                jnp.any(newly) | jnp.any(row_new))
+
+    root_row, root_col, parent, _ = jax.lax.while_loop(
+        lambda c: c[3], bfs_body,
+        (root_row0, root_col0, parent0, jnp.bool_(True)))
+
+    # ---- 2. one endpoint per tree, then flip all paths at once ----------
+    free_lab = (match_col < 0) & (root_col < INF)              # (..., nr)
+    owned = free_lab[..., None, :] & (root_col[..., None, :]
+                                      == rows_i[..., :, None])  # (nl, nr)
+    endpoint = jnp.min(jnp.where(owned, cols_i, INF), axis=-1)  # (..., nl)
+    found = endpoint < INF
+    cur0 = jnp.where(found, endpoint, -1)
+
+    def walk_body(carry):
+        mr, mc, cur = carry
+        active = cur >= 0
+        row = jnp.take_along_axis(parent, jnp.maximum(cur, 0), axis=-1)
+        prev = jnp.take_along_axis(match_row, jnp.maximum(row, 0), axis=-1)
+        # paths are vertex-disjoint: at most one walker writes each slot,
+        # so a masked keyed min IS the scatter
+        row_hit = active[..., :, None] & (rows_i == row[..., :, None])
+        col_for_row = jnp.min(
+            jnp.where(row_hit, cur[..., :, None], INF), axis=-2)
+        mr = jnp.where(col_for_row < INF, col_for_row, mr)
+        col_hit = active[..., :, None] & (cols_i == cur[..., :, None])
+        row_for_col = jnp.min(
+            jnp.where(col_hit, row[..., :, None], INF), axis=-2)
+        mc = jnp.where(row_for_col < INF, row_for_col, mc)
+        # step back over the matched edge; a free (root) row ends the walk
+        return mr, mc, jnp.where(active, prev, cur)
+
+    match_row, match_col, _ = jax.lax.while_loop(
+        lambda c: jnp.any(c[2] >= 0), walk_body,
+        (match_row, match_col, cur0))
+
+    # ---- 3. liveness: augmented AND something left to try ---------------
+    progress = jnp.any(found, axis=-1) & _has_free_work(adj, match_row)
+    return MatchState(adj=adj, match_row=match_row, match_col=match_col,
+                      progress=progress)
+
+
+@functools.lru_cache(maxsize=None)
+def _matching_spec(max_rounds: int, backend: str) -> LoopSpec:
+    """The matching solver's registration with the solver-loop runtime.
+
+    Cached per static-knob tuple so repeated solves hand the runtime the
+    SAME spec object and the compacted drivers' jitted cycles cache-hit.
+    One cycle = one BFS augmenting-path phase; the cycle is shape-
+    polymorphic, so one spec serves every (nl, nr) and every compaction
+    sub-batch size.
+    """
+
+    def cycle(state: MatchState) -> MatchState:
+        return _phase(state, backend)
+
+    def live(state: MatchState, rounds: jax.Array) -> jax.Array:
+        return state.progress & (rounds < max_rounds)
+
+    return LoopSpec(cycle=cycle, live=live, rounds_per_cycle=1,
+                    lead_axes_fn=None)
+
+
+def _match_init(adj, *, greedy_init: bool) -> MatchState:
+    """Initial state: optional maximal greedy matching, then the liveness
+    seed — a phase can only help while a free row with edges exists (an
+    all-isolated or perfectly matched instance converges in 0 rounds)."""
+    adj = jnp.asarray(adj, jnp.bool_)
+    *batch, nl, nr = adj.shape
+    mr = jnp.full(tuple(batch) + (nl,), -1, jnp.int32)
+    mc = jnp.full(tuple(batch) + (nr,), -1, jnp.int32)
+    if greedy_init:
+        mr, mc = _greedy_match(adj, mr, mc)
+    return MatchState(adj=adj, match_row=mr, match_col=mc,
+                      progress=_has_free_work(adj, mr))
+
+
+def _match_finalize(state: MatchState, rounds) -> MatchingResult:
+    """Result view: ``converged`` is the Berge certificate — the last phase
+    found no augmenting path (False only when ``max_rounds`` was hit)."""
+    return MatchingResult(
+        match_row=state.match_row, match_col=state.match_col,
+        cardinality=jnp.sum(state.match_row >= 0, axis=-1),
+        rounds=rounds, converged=~state.progress)
+
+
+def _solve_match(adj, *, max_rounds, greedy_init, backend) -> MatchingResult:
+    """Shared masked solver loop, rank-polymorphic over leading batch axes."""
+    state = _match_init(adj, greedy_init=greedy_init)
+    spec = _matching_spec(max_rounds, backend)
+    state, rounds = run_masked(spec, state, adj.shape[:-2])
+    return _match_finalize(state, rounds)
+
+
+_match_init_jit = jax.jit(_match_init, static_argnames=("greedy_init",))
+_match_finalize_jit = jax.jit(_match_finalize)
+
+
+def _match_batch_compact(adj, *, max_rounds, greedy_init, backend,
+                         lanes=None) -> MatchingResult:
+    """Batched solve with early-exit compaction on the (B,) axis.
+
+    Same driver pattern as the grid/assignment solvers: ``run_compacted``
+    gathers still-live instances into dense pow2-sized sub-batches between
+    jitted cycle segments.  Results bit-match the masked path.
+    """
+    state = _match_init_jit(jnp.asarray(adj, jnp.bool_),
+                            greedy_init=greedy_init)
+    spec = _matching_spec(max_rounds, backend)
+    state, rounds = run_compacted(spec, state, adj.shape[0], lanes=lanes)
+    return _match_finalize_jit(state, rounds)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_rounds", "greedy_init", "backend"))
+def match_bipartite(
+    adj: jax.Array,
+    *,
+    max_rounds: int = 10_000,
+    greedy_init: bool = True,
+    backend: str = "xla",
+) -> MatchingResult:
+    """Maximum-cardinality matching of ONE bipartite instance.
+
+    Args:
+      adj: ``(nl, nr)`` bool adjacency — ``adj[i, j]`` iff left vertex
+        ``i`` is adjacent to right vertex ``j`` (rectangular fine).
+      max_rounds: BFS-phase cap; each phase augments every tree that can
+        augment, so at most ``min(nl, nr)`` phases are ever needed — the
+        cap exists for parity with the other kinds' ``max_rounds`` knob.
+      greedy_init: start from a deterministic maximal greedy matching
+        (fewer phases; identical final cardinality either way).
+      backend: ``"xla"`` or ``"pallas"`` (the frontier-expansion sweep as
+        a TPU kernel, ``repro.kernels.frontier``) — bit-identical results.
+
+    Returns:
+      ``MatchingResult``: ``match_row (nl,)`` / ``match_col (nr,)`` with
+      ``-1`` marking unmatched vertices, the matching ``cardinality``
+      (equal to Hopcroft–Karp's, ``repro.core.matching.ref``), ``rounds``
+      (phases run), and ``converged`` (True = maximality certified by a
+      phase that found no augmenting path — Berge's theorem).
+    """
+    if adj.ndim != 2:
+        raise ValueError(
+            f"match_bipartite solves ONE instance (adj (nl, nr), got "
+            f"{adj.shape}); use match_bipartite_batch for stacked problems")
+    return _solve_match(adj, max_rounds=max_rounds, greedy_init=greedy_init,
+                        backend=backend)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_rounds", "greedy_init", "backend"))
+def _match_batch_impl(adj, *, max_rounds, greedy_init,
+                      backend) -> MatchingResult:
+    """Batched solve (shard_map-able body; every leaf leads with batch)."""
+    return _solve_match(adj, max_rounds=max_rounds, greedy_init=greedy_init,
+                        backend=backend)
+
+
+def match_bipartite_batch(
+    adj: jax.Array,
+    *,
+    max_rounds: int = 10_000,
+    greedy_init: bool = True,
+    backend: str = "xla",
+    compact: bool = False,
+    mesh=None,
+    mesh_axis: str | None = None,
+) -> MatchingResult:
+    """Matching on a BATCH of same-shape bipartite instances, one dispatch.
+
+    Args:
+      adj: ``(B, nl, nr)`` bool — a plain stack of single-instance
+        adjacencies (the pad-and-bucket front end for ragged shapes is
+        ``repro.core.batch.solve_batch("matching", ...)``).
+      max_rounds / greedy_init / backend: as in ``match_bipartite``
+        (applied per instance).
+      compact: early-exit compaction (``repro.core.solver_loop``) — an
+        instance whose maximality is certified leaves the working set
+        between jitted cycle segments instead of being select-masked until
+        the batch's slowest instance finishes.  With ``mesh=``, compaction
+        stays within each shard's lane (``repro.launch.mesh.compact_lanes``).
+      mesh / mesh_axis: optional device mesh — the batch axis is
+        partitioned under ``shard_map`` with no collectives; ``B`` must
+        divide the shard count (the front end pads with inert all-False
+        instances instead of raising).
+
+    Returns ``MatchingResult`` with every leaf leading with the batch axis.
+
+    Bit-match contract: the phase cycle is per-instance pure, so batched
+    == a loop of solo solves == sharded == compacted, exactly as for the
+    other two kinds (tests/test_matching.py).
+    """
+    if adj.ndim != 3:
+        raise ValueError(
+            f"match_bipartite_batch expects adj (B, nl, nr), got "
+            f"{adj.shape}; use match_bipartite for a single instance")
+    kw = dict(max_rounds=max_rounds, greedy_init=greedy_init,
+              backend=backend)
+    if compact:
+        lanes = None
+        if mesh is not None:
+            from repro.launch.mesh import compact_lanes
+            lanes = compact_lanes(mesh, mesh_axis, adj.shape[0])
+        return _match_batch_compact(adj, lanes=lanes, **kw)
+    if mesh is None:
+        return _match_batch_impl(adj, **kw)
+    from repro.launch.mesh import dispatch_sharded
+    return dispatch_sharded(_match_batch_impl, (adj,), adj.shape[0],
+                            mesh, mesh_axis, **kw)

@@ -1,0 +1,124 @@
+"""NumPy reference oracle + instance generators for bipartite matching.
+
+``hopcroft_karp`` is the ground truth the jax solver
+(``repro.core.matching.bfs``) is tested against: a classic sequential
+Hopcroft–Karp — layered BFS to find the shortest augmenting distance, then
+DFS augmentation along vertex-disjoint shortest paths — on a dense boolean
+adjacency matrix.  It returns a maximum-cardinality matching, so equality
+of CARDINALITY (not of the matching itself, which is generally non-unique)
+is the oracle contract of tests/test_matching.py.
+
+The generators cover the acceptance grid: random Erdős–Rényi bipartite
+graphs plus the adversarial families — ``perfect_matching_instance`` (a
+hidden perfect matching under noise: the answer must be exactly
+``min(nl, nr)``), ``star_instance`` (one hub column adjacent to every row:
+the answer is 1 + whatever the off-hub rows can do = 1 for a pure star),
+and ``disconnected_instance`` (block-diagonal components, including empty
+blocks — isolated vertices must never wedge a phase).
+"""
+from __future__ import annotations
+
+import collections
+
+import numpy as np
+
+
+def hopcroft_karp(adj: np.ndarray) -> tuple[np.ndarray, np.ndarray, int]:
+    """Maximum-cardinality bipartite matching of a dense bool adjacency.
+
+    Args:
+      adj: ``(nl, nr)`` bool — ``adj[i, j]`` iff left ``i`` ~ right ``j``.
+
+    Returns ``(match_row, match_col, cardinality)`` with ``-1`` marking an
+    unmatched vertex — the same convention as ``MatchingResult``.
+    """
+    adj = np.asarray(adj, bool)
+    nl, nr = adj.shape
+    nbrs = [np.nonzero(adj[i])[0] for i in range(nl)]
+    match_row = np.full(nl, -1, np.int64)
+    match_col = np.full(nr, -1, np.int64)
+    INF = nl + nr + 1
+
+    def bfs() -> bool:
+        """Layer free rows; True iff some free col is reachable."""
+        dist = np.full(nl, INF, np.int64)
+        q = collections.deque()
+        for i in range(nl):
+            if match_row[i] < 0:
+                dist[i] = 0
+                q.append(i)
+        found = False
+        while q:
+            i = q.popleft()
+            for j in nbrs[i]:
+                k = match_col[j]
+                if k < 0:
+                    found = True
+                elif dist[k] == INF:
+                    dist[k] = dist[i] + 1
+                    q.append(k)
+        bfs.dist = dist
+        return found
+
+    def dfs(i: int) -> bool:
+        for j in nbrs[i]:
+            k = match_col[j]
+            if k < 0 or (bfs.dist[k] == bfs.dist[i] + 1 and dfs(k)):
+                match_row[i], match_col[j] = j, i
+                return True
+        bfs.dist[i] = INF
+        return False
+
+    while bfs():
+        for i in range(nl):
+            if match_row[i] < 0:
+                dfs(i)
+    return match_row, match_col, int(np.sum(match_row >= 0))
+
+
+# ------------------------------------------------------------- generators
+
+def random_bipartite(rng: np.random.Generator, nl: int, nr: int,
+                     p: float = 0.3) -> np.ndarray:
+    """Erdős–Rényi bipartite adjacency: each edge present with prob ``p``."""
+    return rng.random((nl, nr)) < p
+
+
+def perfect_matching_instance(rng: np.random.Generator, n: int,
+                              p_noise: float = 0.2) -> np.ndarray:
+    """A hidden perfect matching (a random permutation) plus noise edges.
+
+    Maximum cardinality is exactly ``n`` — adversarial for augmenting-path
+    solvers because greedy initialization on the noise edges strands rows
+    that only long alternating paths can recover.
+    """
+    adj = rng.random((n, n)) < p_noise
+    adj[np.arange(n), rng.permutation(n)] = True
+    return adj
+
+
+def star_instance(nl: int, nr: int, hub: int = 0) -> np.ndarray:
+    """Every row adjacent to the single hub column only: max matching = 1.
+
+    Maximal contention — every BFS tree claims the same column, so exactly
+    one root may win per phase and the deterministic claim rule is load-
+    bearing.
+    """
+    adj = np.zeros((nl, nr), bool)
+    adj[:, hub] = True
+    return adj
+
+
+def disconnected_instance(rng: np.random.Generator,
+                          blocks: list[tuple[int, int]],
+                          p: float = 0.5) -> np.ndarray:
+    """Block-diagonal components (a zero block = isolated vertices)."""
+    nl = sum(b[0] for b in blocks)
+    nr = sum(b[1] for b in blocks)
+    adj = np.zeros((nl, nr), bool)
+    r = c = 0
+    for bl, br in blocks:
+        if bl and br:
+            adj[r:r + bl, c:c + br] = rng.random((bl, br)) < p
+        r, c = r + bl, c + br
+    return adj

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the frontier-expansion kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.int32(2 ** 30)
+
+
+def frontier_ref(adj, root_row, match_row):
+    """Per-column keyed min over labeled candidate rows (see kernel.py)."""
+    n_r, n_c = adj.shape
+    cols = jnp.arange(n_c, dtype=jnp.int32)[None, :]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (n_r, n_c), 0)
+    cand = jnp.where(
+        adj & (root_row[:, None] < INF) & (match_row[:, None] != cols),
+        root_row[:, None].astype(jnp.int32), INF)
+    min_root = jnp.min(cand, axis=0)
+    claim_row = jnp.min(jnp.where(cand == min_root[None, :], rows, INF),
+                        axis=0)
+    return min_root, claim_row

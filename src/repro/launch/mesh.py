@@ -59,8 +59,11 @@ def make_solver_mesh(n_devices: int | None = None, *, axis: str = "batch"):
       axis: mesh axis name; the solvers' default sharding axis is "batch".
 
     Returns a ``jax.sharding.Mesh`` accepted by the ``mesh=`` knob of
-    ``maxflow_grid_batch`` / ``solve_assignment`` /
-    ``repro.core.batch.solve_*_batch``.
+    every registered solver kind's batched entry point
+    (``maxflow_grid_batch`` / ``solve_assignment`` /
+    ``match_bipartite_batch`` / ...), of the generic ragged front end
+    ``repro.core.batch.solve_batch``, and of the serving engines
+    (``repro.serve``).
     """
     devs = jax.devices()
     if n_devices is not None:

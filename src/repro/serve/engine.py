@@ -6,13 +6,15 @@ Two engines live here:
   for every request in the batch against a full KV/SSM cache (what the
   decode_* / long_* dry-run shapes lower), and
 * the solver path — ``SolverEngine``: the ROADMAP's request-queue →
-  pad-and-bucket → (mesh-sharded) batched-solve pipeline for the paper's
-  flow/matching solvers. Requests of mixed kinds and ragged shapes are
-  queued with ``submit_maxflow`` / ``submit_assignment`` and solved together
-  on ``flush()`` — grids and cost matrices are bucketed and padded by
-  ``repro.core.batch``, every bucket is one jitted dispatch, and an optional
-  device mesh shards each bucket's batch axis (``shard_map``, zero
-  cross-device traffic; see docs/batching.md).
+  pad-and-bucket → (mesh-sharded) batched-solve pipeline for the
+  registered solver kinds (``repro.core.kinds``). Requests of mixed kinds
+  and ragged shapes are queued with ``submit(kind, payload)`` and solved
+  together on ``flush()`` — payloads are bucketed and padded by each
+  kind's registered host stage, every bucket is one jitted dispatch, and
+  an optional device mesh shards each bucket's batch axis (``shard_map``,
+  zero cross-device traffic; see docs/batching.md). The engine itself
+  never names a kind: a new solver registered with the registry serves
+  through it unchanged (docs/solvers.md).
 
 ``SolverEngine`` is also the SYNCHRONOUS CORE of the async serving
 scheduler (``repro.serve.scheduler.AsyncSolverEngine``): the scheduler
@@ -22,19 +24,19 @@ overlaps batch *k*'s device solve — see docs/serving.md.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.batch import (BucketStats, PreparedBucket,
-                              prepare_assignment_buckets,
-                              prepare_maxflow_buckets,
-                              solve_prepared_assignment,
-                              solve_prepared_maxflow)
-from repro.core.maxflow.grid import GridProblem
+# Validators moved to repro.core.batch (each kind registers its own);
+# re-exported here because this was their historical home.
+from repro.core.batch import (BucketStats, PreparedBucket,  # noqa: F401
+                              validate_assignment_matrix,
+                              validate_grid_problem)
+from repro.core.kinds import get_kind
 from repro.models.layers import Sharder
 from repro.models.model import apply_model, init_caches
 
@@ -75,67 +77,33 @@ def make_serve_step(cfg: ModelConfig, axes, shd: Sharder,
     return serve_step
 
 
-def validate_grid_problem(problem) -> GridProblem:
-    """Canonicalize + validate a max-flow request (shapes, dtypes, values).
-
-    The submit-time contract shared by ``SolverEngine`` and
-    ``AsyncSolverEngine``: malformed requests are rejected BEFORE a ticket
-    or future exists, so a queue can never hold an entry that would wedge a
-    batched flush. Checks shape ((4, H, W) / (H, W) / (H, W)), numeric
-    dtype (bool and object arrays are refused), and values — capacities
-    must be finite and non-negative (a negative or NaN capacity breaks the
-    residual-graph invariants silently rather than loudly).
-    """
-    try:
-        cap, cs, ct = (jnp.asarray(a) for a in problem)
-    except (TypeError, ValueError) as e:
-        raise ValueError(f"malformed grid problem: not array-like ({e})")
-    if cap.ndim != 3 or cap.shape[0] != 4 or cs.shape != ct.shape \
-            or cs.shape != cap.shape[1:]:
-        raise ValueError(
-            f"malformed grid problem: cap_nbr {cap.shape}, "
-            f"cap_src {cs.shape}, cap_sink {ct.shape}; expected "
-            f"(4, H, W) / (H, W) / (H, W)")
-    for name, a in (("cap_nbr", cap), ("cap_src", cs), ("cap_sink", ct)):
-        if not (jnp.issubdtype(a.dtype, jnp.floating)
-                or jnp.issubdtype(a.dtype, jnp.integer)):
-            raise ValueError(
-                f"malformed grid problem: {name} has non-numeric dtype "
-                f"{a.dtype} (need integer or floating capacities)")
-        v = np.asarray(a)
-        if not np.all(np.isfinite(v)):
-            raise ValueError(
-                f"malformed grid problem: {name} contains non-finite "
-                f"capacities (NaN/inf)")
-        if np.any(v < 0):
-            raise ValueError(
-                f"malformed grid problem: {name} contains negative "
-                f"capacities (min={v.min()})")
-    return GridProblem(cap, cs, ct)
-
-
-def validate_assignment_matrix(w) -> np.ndarray:
-    """Canonicalize + validate an assignment request (square int matrix)."""
-    w = np.asarray(w)
-    if w.ndim != 2 or w.shape[0] != w.shape[1] \
-            or not np.issubdtype(w.dtype, np.integer):
-        raise ValueError(
-            f"malformed assignment request: need a square integer "
-            f"matrix, got shape {w.shape} dtype {w.dtype}")
-    return w
+def _merge_deprecated_kw(solver_kw: dict | None, maxflow_kw: dict | None,
+                         assignment_kw: dict | None,
+                         owner: str) -> dict[str, dict]:
+    """Fold the legacy per-kind kwargs into ``solver_kw`` (with warnings)."""
+    merged = {k: dict(v) for k, v in (solver_kw or {}).items()}
+    for kind, kw, name in (("maxflow", maxflow_kw, "maxflow_kw"),
+                           ("assignment", assignment_kw, "assignment_kw")):
+        if kw is not None:
+            warnings.warn(
+                f"{owner}({name}=...) is deprecated; use "
+                f"solver_kw={{{kind!r}: {{...}}}}",
+                DeprecationWarning, stacklevel=3)
+            merged.setdefault(kind, {}).update(kw)
+    return merged
 
 
 class SolverEngine:
     """Request queue -> pad-and-bucket -> (sharded) batched solve.
 
-    The serving front door for the paper's two solvers. Callers ``submit_*``
-    problems as they arrive and receive integer tickets; ``flush()`` solves
-    everything pending — max-flow requests through
-    ``repro.core.batch.solve_maxflow_batch`` and assignment requests through
-    ``solve_assignment_batch`` — and returns ``{ticket: result}``. Results
-    are exactly what the direct front-end calls would return (same padding,
-    same bucketing, bit-identical values), so correctness is inherited from
-    the tested batch path.
+    The serving front door for every registered solver kind. Callers
+    ``submit(kind, payload)`` problems as they arrive and receive integer
+    tickets; ``flush()`` solves everything pending — each kind through its
+    registered host/device stages (``repro.core.kinds``) — and returns
+    ``{ticket: result}``. Results are exactly what the direct front-end
+    calls (``repro.core.batch.solve_batch``) would return (same padding,
+    same bucketing, bit-identical values), so correctness is inherited
+    from the tested batch path.
 
     Partial-failure contract: ``flush`` solves one kind at a time and
     DELIVERS each kind the moment it completes (into an internal ready
@@ -158,21 +126,27 @@ class SolverEngine:
         request finishes. Off by default; worth opting into for serving
         queues, whose convergence is naturally ragged (see
         benchmarks/RESULTS_compaction.md). Results stay bit-identical.
-      maxflow_kw / assignment_kw: per-kind solver keyword overrides
-        (``backend=``, ``method=``, ``max_rounds=``, ...).
+      solver_kw: per-kind solver keyword overrides, keyed by kind name —
+        ``{"maxflow": {"backend": ...}, "matching": {"max_rounds": ...}}``.
+      maxflow_kw / assignment_kw: DEPRECATED — the pre-registry spelling of
+        ``solver_kw`` for the two original kinds; folded into
+        ``solver_kw`` with a ``DeprecationWarning``.
     """
 
     def __init__(self, *, mesh=None, mesh_axis: str | None = None,
                  bucket: str = "max", compact: bool = False,
+                 solver_kw: dict[str, dict] | None = None,
                  maxflow_kw: dict | None = None,
                  assignment_kw: dict | None = None):
         self.mesh, self.mesh_axis, self.bucket = mesh, mesh_axis, bucket
         self.compact = compact
-        self.maxflow_kw = dict(maxflow_kw or {})
-        self.assignment_kw = dict(assignment_kw or {})
+        self.solver_kw = _merge_deprecated_kw(
+            solver_kw, maxflow_kw, assignment_kw, "SolverEngine")
         self._next_ticket = 0
-        self._maxflow: list[tuple[int, Any]] = []
-        self._assignment: list[tuple[int, Any]] = []
+        # per-kind queues, keyed lazily on first submit; dict insertion
+        # order fixes the kind order of flush (and so of the
+        # partial-failure delivery contract)
+        self._queues: dict[str, list[tuple[int, Any]]] = {}
         # results of kinds that completed before a later kind's flush raised
         self._ready: dict[int, Any] = {}
 
@@ -180,53 +154,49 @@ class SolverEngine:
         t, self._next_ticket = self._next_ticket, self._next_ticket + 1
         return t
 
-    def submit_maxflow(self, problem) -> int:
-        """Queue a ``GridProblem`` (any (H, W)); returns its ticket.
+    def submit(self, kind: str, payload) -> int:
+        """Queue one request of a registered kind; returns its ticket.
 
-        Malformed requests — wrong shapes, non-numeric dtypes, negative or
-        non-finite capacities — are rejected HERE (before a ticket is
-        issued, ``validate_grid_problem``) so ``flush`` cannot be wedged by
-        a bad queue entry.
+        Malformed payloads are rejected HERE, by the kind's registered
+        validator, BEFORE a ticket is issued — so ``flush`` cannot be
+        wedged by a bad queue entry. Unknown kinds raise ``ValueError``
+        naming the registered ones.
         """
-        problem = validate_grid_problem(problem)
+        payload = get_kind(kind).validate(payload)
         t = self._ticket()
-        self._maxflow.append((t, problem))
+        self._queues.setdefault(kind, []).append((t, payload))
         return t
+
+    def submit_maxflow(self, problem) -> int:
+        """DEPRECATED: use ``submit("maxflow", problem)``."""
+        warnings.warn(
+            'submit_maxflow(...) is deprecated; use submit("maxflow", ...)',
+            DeprecationWarning, stacklevel=2)
+        return self.submit("maxflow", problem)
 
     def submit_assignment(self, w) -> int:
-        """Queue a square integer weight matrix (any n); returns its ticket.
-
-        Rejects non-square or non-integer matrices at submit time
-        (``validate_assignment_matrix`` — same reject-before-ticket
-        contract as ``submit_maxflow``).
-        """
-        w = validate_assignment_matrix(w)
-        t = self._ticket()
-        self._assignment.append((t, w))
-        return t
+        """DEPRECATED: use ``submit("assignment", w)``."""
+        warnings.warn(
+            'submit_assignment(...) is deprecated; use '
+            'submit("assignment", ...)', DeprecationWarning, stacklevel=2)
+        return self.submit("assignment", w)
 
     def pending(self) -> int:
         """Number of queued, unsolved requests."""
-        return len(self._maxflow) + len(self._assignment)
+        return sum(len(q) for q in self._queues.values())
 
     # ---- the synchronous core the async scheduler drives ----------------
 
     def prepare(self, kind: str, payloads: list) -> list[PreparedBucket]:
         """HOST stage: pad-and-bucket ``payloads`` of one kind.
 
-        Pure host work (``repro.core.batch.prepare_*_buckets`` with this
-        engine's bucket/mesh config) — the stage the async scheduler
+        Pure host work (the kind's registered ``prepare_buckets`` with
+        this engine's bucket/mesh config) — the stage the async scheduler
         overlaps with the previous batch's device solve.
         """
-        if kind == "maxflow":
-            return prepare_maxflow_buckets(
-                payloads, bucket=self.bucket, mesh=self.mesh,
-                mesh_axis=self.mesh_axis)
-        if kind == "assignment":
-            return prepare_assignment_buckets(
-                payloads, bucket=self.bucket, mesh=self.mesh,
-                mesh_axis=self.mesh_axis)
-        raise ValueError(f"unknown request kind: {kind!r}")
+        return get_kind(kind).prepare_buckets(
+            payloads, bucket=self.bucket, mesh=self.mesh,
+            mesh_axis=self.mesh_axis)
 
     def solve_prepared(self, prep: PreparedBucket, *,
                        compact: bool | None = None) \
@@ -238,13 +208,10 @@ class SolverEngine:
         Returns ``({payload_position: result}, BucketStats)``.
         """
         compact = self.compact if compact is None else compact
-        if prep.kind == "maxflow":
-            return solve_prepared_maxflow(
-                prep, compact=compact, mesh=self.mesh,
-                mesh_axis=self.mesh_axis, **self.maxflow_kw)
-        return solve_prepared_assignment(
+        return get_kind(prep.kind).solve_prepared(
             prep, compact=compact, mesh=self.mesh,
-            mesh_axis=self.mesh_axis, **self.assignment_kw)
+            mesh_axis=self.mesh_axis,
+            **self.solver_kw.get(prep.kind, {}))
 
     def solve_requests(self, kind: str, payloads: list, *,
                        compact: bool | None = None,
@@ -267,25 +234,23 @@ class SolverEngine:
     def flush(self, *, stats_out: list | None = None) -> dict[int, Any]:
         """Solve every pending request; returns ``{ticket: result}``.
 
-        One batched dispatch per (kind, bucket shape); a flushed kind's
-        queue is emptied even if a request did not converge (check
-        ``result.converged``). An empty queue returns ``{}`` without
-        dispatching. If one kind's batch raises, kinds that already
-        completed stay delivered (returned by the next flush, not
-        re-solved) and only the failing kind remains queued.
+        One batched dispatch per (kind, bucket shape), kinds in
+        first-submission order; a flushed kind's queue is emptied even if
+        a request did not converge (check ``result.converged``). An empty
+        queue returns ``{}`` without dispatching. If one kind's batch
+        raises, kinds that already completed stay delivered (returned by
+        the next flush, not re-solved) and only the failing kind remains
+        queued.
         """
-        if self._maxflow:
-            tickets, probs = zip(*self._maxflow)
-            res = self.solve_requests("maxflow", list(probs),
+        for kind in list(self._queues):
+            q = self._queues[kind]
+            if not q:
+                continue
+            tickets, payloads = zip(*q)
+            res = self.solve_requests(kind, list(payloads),
                                       stats_out=stats_out)
             self._ready.update(zip(tickets, res))
-            self._maxflow.clear()
-        if self._assignment:
-            tickets, ws = zip(*self._assignment)
-            res = self.solve_requests("assignment", list(ws),
-                                      stats_out=stats_out)
-            self._ready.update(zip(tickets, res))
-            self._assignment.clear()
+            q.clear()
         out, self._ready = self._ready, {}
         return out
 

@@ -107,6 +107,11 @@ class ConvergenceStats:
             e = self._occupancy.get(kind)
             return None if e is None else e.value
 
+    def kinds(self) -> tuple[str, ...]:
+        """Every kind observed so far (union of spread/occupancy keys)."""
+        with self._lock:
+            return tuple(dict.fromkeys([*self._spread, *self._occupancy]))
+
 
 class SchedulerMetrics:
     """The async scheduler's full telemetry surface (thread-safe).
@@ -188,9 +193,22 @@ class SchedulerMetrics:
                     self._compact_live_total / self._compact_cycles
                     if self._compact_cycles else None),
             }
-        snap["spread_ewma"] = {
-            k: self.convergence.spread(k) for k in ("maxflow", "assignment")}
+        kinds = _snapshot_kinds(self.convergence)
+        snap["spread_ewma"] = {k: self.convergence.spread(k) for k in kinds}
         snap["occupancy_ewma"] = {
-            k: self.convergence.occupancy(k)
-            for k in ("maxflow", "assignment")}
+            k: self.convergence.occupancy(k) for k in kinds}
         return snap
+
+
+def _snapshot_kinds(convergence: ConvergenceStats) -> tuple[str, ...]:
+    """Kinds a snapshot should report EWMAs for.
+
+    The union of the REGISTERED kinds (so a quiet kind still appears, with
+    ``None`` EWMAs) and the OBSERVED kinds (so nothing recorded is ever
+    hidden). The registry is peeked without importing the solver modules
+    (``ensure=False``) — this module must stay importable without jax.
+    """
+    from repro.core.kinds import registered_kinds
+    seen = dict.fromkeys(registered_kinds(ensure=False))
+    seen.update(dict.fromkeys(convergence.kinds()))
+    return tuple(seen)

@@ -5,8 +5,9 @@ nothing until a caller flushes, and while it pads the next queue the
 device idles. This module puts a SCHEDULER in front of the same
 synchronous core:
 
-* ``AsyncSolverEngine.submit_maxflow`` / ``submit_assignment`` may be
-  called from any thread and return ``concurrent.futures.Future``s;
+* ``AsyncSolverEngine.submit(kind, payload)`` may be called from any
+  thread — for any kind registered with ``repro.core.kinds`` — and
+  returns a ``concurrent.futures.Future``;
 * a background scheduler thread flushes a kind when its queue reaches
   ``max_batch`` (size trigger) or the oldest request's deadline expires
   (deadline trigger, per-request ``deadline_ms`` with ``max_delay_ms`` as
@@ -20,13 +21,19 @@ synchronous core:
   onto disjoint sub-meshes (``repro.launch.mesh.scheduler_lanes``) so two
   batches overlap on hardware;
 * per dispatch the scheduler picks the MASKED or COMPACTED solver-loop
-  driver adaptively from the EWMA of recent batches' convergence spread
-  (``repro.serve.metrics.ConvergenceStats``; ``dispatch=`` forces either
-  driver), and
+  driver adaptively from the EWMA of recent batches' convergence spread,
+  tracked PER KIND (``repro.serve.metrics.ConvergenceStats``;
+  ``dispatch=`` forces either driver), and
 * every result is bit-identical to the synchronous ``flush()`` of the
   same queue — the scheduler only decides WHEN and ON WHICH DEVICES the
   tested batch path runs, never what it computes
   (tests/test_scheduler.py).
+
+The scheduler itself is kind-agnostic: queues, triggers, EWMAs, and lane
+dispatch are all keyed by the kind names that actually arrive, so a newly
+registered solver kind (docs/solvers.md) serves through it with no change
+here — tests/test_matching.py drives the ``"matching"`` kind through this
+exact code path.
 
 Failure semantics: requests are validated BEFORE a future exists (same
 contract as the sync engine); if a batched dispatch still fails, the lane
@@ -44,17 +51,17 @@ import itertools
 import queue
 import threading
 import time
+import warnings
 from concurrent.futures import Future
 from dataclasses import dataclass, field
 from typing import Any
 
+from repro.core.kinds import get_kind
 from repro.core.solver_loop import trace_cycles
 from repro.launch.mesh import scheduler_lanes
-from repro.serve.engine import (SolverEngine, validate_assignment_matrix,
-                                validate_grid_problem)
+from repro.serve.engine import SolverEngine, _merge_deprecated_kw
 from repro.serve.metrics import SchedulerMetrics
 
-KINDS = ("maxflow", "assignment")
 _SENTINEL = object()
 
 
@@ -119,9 +126,11 @@ class AsyncSolverEngine:
       n_lanes: dispatch lanes for the host/device pipeline (2 =
         double-buffered). On a mesh with >= n_lanes devices each lane owns
         a disjoint sub-mesh (``repro.launch.mesh.scheduler_lanes``).
-      mesh / mesh_axis / bucket / maxflow_kw / assignment_kw: forwarded to
-        the per-lane ``SolverEngine`` cores (same semantics as the
-        blocking engine; docs/batching.md).
+      mesh / mesh_axis / bucket / solver_kw: forwarded to the per-lane
+        ``SolverEngine`` cores (same semantics as the blocking engine;
+        docs/batching.md) — ``solver_kw`` is keyed by kind name.
+      maxflow_kw / assignment_kw: DEPRECATED — folded into ``solver_kw``
+        with a ``DeprecationWarning``.
       metrics: optional ``SchedulerMetrics`` to record into (one is
         created otherwise; read it via ``.metrics.snapshot()``).
 
@@ -134,7 +143,9 @@ class AsyncSolverEngine:
                  dispatch: str = "adaptive", spread_threshold: float = 0.25,
                  min_compact_batch: int = 4, ewma_alpha: float = 0.25,
                  n_lanes: int = 2, mesh=None, mesh_axis: str | None = None,
-                 bucket: str = "max", maxflow_kw: dict | None = None,
+                 bucket: str = "max",
+                 solver_kw: dict[str, dict] | None = None,
+                 maxflow_kw: dict | None = None,
                  assignment_kw: dict | None = None,
                  metrics: SchedulerMetrics | None = None):
         if max_batch < 1:
@@ -151,17 +162,20 @@ class AsyncSolverEngine:
         self.min_compact_batch = min_compact_batch
         self.metrics = metrics or SchedulerMetrics(ewma_alpha=ewma_alpha)
 
+        solver_kw = _merge_deprecated_kw(
+            solver_kw, maxflow_kw, assignment_kw, "AsyncSolverEngine")
         self._lanes = [
             _Lane(engine=SolverEngine(
                 mesh=lane_mesh, mesh_axis=mesh_axis, bucket=bucket,
-                maxflow_kw=maxflow_kw, assignment_kw=assignment_kw))
+                solver_kw=solver_kw))
             for lane_mesh in scheduler_lanes(mesh, mesh_axis, n_lanes)]
         self._rr = itertools.cycle(range(len(self._lanes)))
 
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)
-        self._pending: dict[str, collections.deque[_Request]] = {
-            k: collections.deque() for k in KINDS}
+        # per-kind FIFO queues, keyed lazily by the kinds that actually
+        # arrive (insertion order fixes the flush order across kinds)
+        self._pending: dict[str, collections.deque[_Request]] = {}
         self._next_ticket = 0
         self._manual = False
         self._closing = False
@@ -179,7 +193,17 @@ class AsyncSolverEngine:
 
     # ---- submission ------------------------------------------------------
 
-    def _submit(self, kind: str, payload, deadline_ms: float | None) -> Future:
+    def submit(self, kind: str, payload, *,
+               deadline_ms: float | None = None) -> Future:
+        """Queue one request of a registered kind; returns a Future.
+
+        Validation happens HERE, synchronously, via the kind's registered
+        validator — a rejected payload (or an unknown kind) raises
+        ``ValueError`` and no future is created. ``future.result()`` is
+        the same result the blocking engine's ``flush`` would return for
+        this request.
+        """
+        payload = get_kind(kind).validate(payload)
         now = time.monotonic()
         budget = self.max_delay_ms if deadline_ms is None else deadline_ms
         if budget <= 0:
@@ -193,29 +217,26 @@ class AsyncSolverEngine:
                            payload=payload, future=fut, submit_t=now,
                            deadline_t=now + budget / 1e3)
             self._next_ticket += 1
-            self._pending[kind].append(req)
+            self._pending.setdefault(kind, collections.deque()).append(req)
             self.metrics.record_submit(self._depth_locked())
             self._cond.notify_all()
         return fut
 
     def submit_maxflow(self, problem, *,
                        deadline_ms: float | None = None) -> Future:
-        """Queue a grid max-flow request; returns a Future of its result.
-
-        Validation (shapes, dtypes, non-negative finite capacities) happens
-        HERE, synchronously — a rejected request raises ``ValueError`` and
-        no future is created (``repro.serve.engine.validate_grid_problem``).
-        ``future.result()`` is the same ``GridFlowResult`` the blocking
-        engine would return for this request.
-        """
-        return self._submit("maxflow", validate_grid_problem(problem),
-                            deadline_ms)
+        """DEPRECATED: use ``submit("maxflow", problem)``."""
+        warnings.warn(
+            'submit_maxflow(...) is deprecated; use submit("maxflow", ...)',
+            DeprecationWarning, stacklevel=2)
+        return self.submit("maxflow", problem, deadline_ms=deadline_ms)
 
     def submit_assignment(self, w, *,
                           deadline_ms: float | None = None) -> Future:
-        """Queue an assignment request; returns a Future of its result."""
-        return self._submit("assignment", validate_assignment_matrix(w),
-                            deadline_ms)
+        """DEPRECATED: use ``submit("assignment", w)``."""
+        warnings.warn(
+            'submit_assignment(...) is deprecated; use '
+            'submit("assignment", ...)', DeprecationWarning, stacklevel=2)
+        return self.submit("assignment", w, deadline_ms=deadline_ms)
 
     def flush_now(self) -> None:
         """Manual trigger: flush everything pending without waiting.
@@ -260,7 +281,7 @@ class AsyncSolverEngine:
         strand its batch-mates.
         """
         batches = []
-        for kind in KINDS:
+        for kind in list(self._pending):
             q = self._pending[kind]
             while len(q) >= self.max_batch:
                 batches.append((kind, [q.popleft()
@@ -394,9 +415,9 @@ class AsyncSolverEngine:
             self._closed = True
             self._closing = True            # submit() now refuses
             if not drain:
-                dropped = [r for k in KINDS for r in self._pending[k]]
-                for k in KINDS:
-                    self._pending[k].clear()
+                dropped = [r for q in self._pending.values() for r in q]
+                for q in self._pending.values():
+                    q.clear()
             self._cond.notify_all()
         if not drain:
             for r in dropped:

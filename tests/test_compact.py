@@ -227,8 +227,8 @@ def test_engine_compact_matches_direct_front_end():
     probs = [GridProblem(*map(jnp.asarray, random_grid_problem(rng, h, w)))
              for h, w in [(6, 6), (4, 5), (6, 6)]]
     ws = [rng.integers(0, 50, (n, n)) for n in (5, 7)]
-    tickets = [engine.submit_maxflow(p) for p in probs]
-    tickets += [engine.submit_assignment(w) for w in ws]
+    tickets = [engine.submit("maxflow", p) for p in probs]
+    tickets += [engine.submit("assignment", w) for w in ws]
     out = engine.flush()
     assert sorted(out) == tickets and engine.pending() == 0
 

@@ -3,7 +3,8 @@
 What's under test (repro.serve.engine):
 
 * submit-time validation rejects malformed VALUES, not just shapes —
-  negative / non-finite / non-numeric capacities never get a ticket;
+  negative / non-finite / non-numeric capacities never get a ticket
+  (each kind's REGISTERED validator, ``repro.core.kinds``);
 * ``flush()`` on an empty queue returns ``{}`` without dispatching;
 * tickets stay globally ordered across interleaved submit/flush rounds
   and mixed kinds, and every flush returns exactly its round's tickets;
@@ -15,7 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-import repro.serve.engine as engine_mod
+import repro.core.kinds as kinds_mod
+from repro.core.kinds import get_kind
 from repro.core.maxflow.grid import GridProblem
 from repro.core.maxflow.ref import random_grid_problem
 from repro.serve.engine import (SolverEngine, validate_assignment_matrix,
@@ -28,24 +30,31 @@ def _prob(rng, h=6, w=6):
 
 # ---------------------------------------------------------- validation
 
-def test_submit_maxflow_rejects_bad_values_before_ticket():
+def test_submit_rejects_bad_values_before_ticket():
     engine = SolverEngine()
     good = _prob(np.random.default_rng(0))
     neg = GridProblem(good.cap_nbr, -good.cap_src, good.cap_sink)
     with pytest.raises(ValueError, match="negative"):
-        engine.submit_maxflow(neg)
+        engine.submit("maxflow", neg)
     nan = GridProblem(good.cap_nbr,
                       jnp.full_like(good.cap_src, jnp.nan), good.cap_sink)
     with pytest.raises(ValueError, match="non-finite"):
-        engine.submit_maxflow(nan)
+        engine.submit("maxflow", nan)
     boolean = GridProblem(jnp.zeros((4, 6, 6), jnp.bool_),
                           good.cap_src, good.cap_sink)
     with pytest.raises(ValueError, match="non-numeric"):
-        engine.submit_maxflow(boolean)
+        engine.submit("maxflow", boolean)
     # the reject-before-ticket contract: nothing was queued, and the next
     # good submit gets ticket 0 (no ticket was burned on a rejection)
     assert engine.pending() == 0
-    assert engine.submit_maxflow(good) == 0
+    assert engine.submit("maxflow", good) == 0
+
+
+def test_submit_unknown_kind_names_registered_ones():
+    engine = SolverEngine()
+    with pytest.raises(ValueError, match="registered kinds.*maxflow"):
+        engine.submit("tsp", object())
+    assert engine.pending() == 0
 
 
 def test_validators_canonicalize_good_requests():
@@ -74,11 +83,11 @@ def test_flush_empty_queue_returns_empty_dict():
 def test_mixed_kind_queue_with_one_kind_empty():
     rng = np.random.default_rng(2)
     engine = SolverEngine()
-    t0 = engine.submit_maxflow(_prob(rng))
+    t0 = engine.submit("maxflow", _prob(rng))
     out = engine.flush()                 # assignment queue empty
     assert sorted(out) == [t0] and bool(out[t0].converged)
 
-    t1 = engine.submit_assignment(rng.integers(0, 9, (4, 4)))
+    t1 = engine.submit("assignment", rng.integers(0, 9, (4, 4)))
     out = engine.flush()                 # maxflow queue empty
     assert sorted(out) == [t1] and bool(out[t1].converged)
 
@@ -90,9 +99,10 @@ def test_ticket_ordering_across_interleaved_rounds():
     engine = SolverEngine()
     seen: list[int] = []
     for _ in range(3):
-        round_tickets = [engine.submit_maxflow(_prob(rng)),
-                         engine.submit_assignment(rng.integers(0, 9, (4, 4))),
-                         engine.submit_maxflow(_prob(rng))]
+        round_tickets = [
+            engine.submit("maxflow", _prob(rng)),
+            engine.submit("assignment", rng.integers(0, 9, (4, 4))),
+            engine.submit("matching", rng.random((4, 5)) < 0.5)]
         assert round_tickets == sorted(round_tickets)
         assert seen == [] or min(round_tickets) > max(seen)
         out = engine.flush()
@@ -106,35 +116,38 @@ def test_ticket_ordering_across_interleaved_rounds():
 def test_completed_kind_delivers_when_other_kind_fails(monkeypatch):
     """The flush-order bugfix: max-flow solves first; if the assignment
     batch then raises, the max-flow results must survive — delivered by
-    the retry flush WITHOUT re-solving — and only assignment stays queued."""
+    the retry flush WITHOUT re-solving — and only assignment stays queued.
+
+    The failure is injected through the REGISTRY (the only dispatch seam
+    the engine uses now)."""
     rng = np.random.default_rng(4)
     engine = SolverEngine()
-    tf = engine.submit_maxflow(_prob(rng))
-    ta = engine.submit_assignment(rng.integers(0, 9, (5, 5)))
+    tf = engine.submit("maxflow", _prob(rng))
+    ta = engine.submit("assignment", rng.integers(0, 9, (5, 5)))
 
     maxflow_calls = []
-    real_maxflow = engine_mod.solve_prepared_maxflow
+    real_maxflow = get_kind("maxflow")
+    real_assignment = get_kind("assignment")
 
     def counting_maxflow(prep, **kw):
         maxflow_calls.append(prep)
-        return real_maxflow(prep, **kw)
+        return real_maxflow.solve_prepared(prep, **kw)
 
     def assignment_boom(prep, **kw):
         raise RuntimeError("transient assignment failure")
 
-    monkeypatch.setattr(engine_mod, "solve_prepared_maxflow",
-                        counting_maxflow)
-    monkeypatch.setattr(engine_mod, "solve_prepared_assignment",
-                        assignment_boom)
+    monkeypatch.setitem(kinds_mod._REGISTRY, "maxflow",
+                        real_maxflow._replace(solve_prepared=counting_maxflow))
+    monkeypatch.setitem(kinds_mod._REGISTRY, "assignment",
+                        real_assignment._replace(
+                            solve_prepared=assignment_boom))
 
     with pytest.raises(RuntimeError, match="transient"):
         engine.flush()
     # max-flow completed and left the queue; assignment stayed for retry
     assert engine.pending() == 1 and len(maxflow_calls) == 1
 
-    from repro.core.batch import solve_prepared_assignment
-    monkeypatch.setattr(engine_mod, "solve_prepared_assignment",
-                        solve_prepared_assignment)
+    monkeypatch.setitem(kinds_mod._REGISTRY, "assignment", real_assignment)
     out = engine.flush()
     # both tickets delivered; the max-flow batch was NOT re-solved
     assert sorted(out) == [tf, ta] and len(maxflow_calls) == 1
@@ -144,13 +157,15 @@ def test_completed_kind_delivers_when_other_kind_fails(monkeypatch):
 def test_flush_stats_out_reports_buckets():
     rng = np.random.default_rng(5)
     engine = SolverEngine()
-    engine.submit_maxflow(_prob(rng))
-    engine.submit_maxflow(_prob(rng))
-    engine.submit_assignment(rng.integers(0, 9, (4, 4)))
+    engine.submit("maxflow", _prob(rng))
+    engine.submit("maxflow", _prob(rng))
+    engine.submit("assignment", rng.integers(0, 9, (4, 4)))
+    engine.submit("matching", rng.random((5, 5)) < 0.4)
     stats = []
     out = engine.flush(stats_out=stats)
-    assert len(out) == 3 and len(stats) == 2
+    assert len(out) == 4 and len(stats) == 3
     kinds = {s.kind: s for s in stats}
     assert kinds["maxflow"].n_real == 2
     assert kinds["assignment"].n_real == 1
+    assert kinds["matching"].n_real == 1
     assert all(0.0 <= s.spread <= 1.0 for s in stats)

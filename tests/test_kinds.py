@@ -1,0 +1,134 @@
+"""Solver-kind registry: error paths, registration rules, deprecation shims.
+
+The contracts under test (repro.core.kinds + the serve layer's shims):
+
+* unknown kinds raise ``ValueError`` NAMING the registered kinds — from
+  ``get_kind`` and from every front end that dispatches through it;
+* duplicate registration raises (silent overwrite would make dispatch
+  order-of-import dependent), as do malformed kind names;
+* ``registered_kinds()`` ensures the builtins and preserves registration
+  order; ``ensure=False`` peeks without importing solver modules;
+* the pre-registry serve spellings — ``SolverEngine(maxflow_kw=,
+  assignment_kw=)``, ``submit_maxflow`` / ``submit_assignment`` on both
+  engines — still work but emit ``DeprecationWarning`` and delegate to the
+  generic ``solver_kw`` / ``submit(kind, ...)`` path.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.kinds as kinds_mod
+from repro.core.batch import solve_batch
+from repro.core.kinds import (SolverKind, get_kind, register_kind,
+                              registered_kinds)
+from repro.core.maxflow.grid import GridProblem
+from repro.core.maxflow.ref import random_grid_problem
+from repro.serve.engine import SolverEngine
+
+
+def _prob(rng, h=5, w=5):
+    return GridProblem(*map(jnp.asarray, random_grid_problem(rng, h, w)))
+
+
+def _dummy_kind(name):
+    f = lambda *a, **k: None  # noqa: E731
+    return SolverKind(name=name, validate=f, inert_problem=f,
+                      prepare_buckets=f, solve_prepared=f, loop_spec=f)
+
+
+# ------------------------------------------------------------ error paths
+
+def test_unknown_kind_names_registered_kinds():
+    with pytest.raises(ValueError) as ei:
+        get_kind("tsp")
+    msg = str(ei.value)
+    assert "unknown solver kind 'tsp'" in msg
+    for name in ("maxflow", "assignment", "matching"):
+        assert name in msg
+
+
+def test_unknown_kind_raises_from_every_front_end():
+    with pytest.raises(ValueError, match="registered kinds"):
+        solve_batch("tsp", [object()])
+    with pytest.raises(ValueError, match="registered kinds"):
+        SolverEngine().submit("tsp", object())
+    from repro.core.batch import prepare_buckets
+    with pytest.raises(ValueError, match="registered kinds"):
+        prepare_buckets("tsp", [object()])
+
+
+def test_duplicate_registration_raises(monkeypatch):
+    registered_kinds()                     # ensure builtins are present
+    with pytest.raises(ValueError, match="already registered"):
+        register_kind(_dummy_kind("matching"))
+    # and a scratch name registers exactly once
+    monkeypatch.delitem(kinds_mod._REGISTRY, "scratch", raising=False)
+    register_kind(_dummy_kind("scratch"))
+    try:
+        with pytest.raises(ValueError, match="already registered"):
+            register_kind(_dummy_kind("scratch"))
+        assert "scratch" in registered_kinds()
+    finally:
+        del kinds_mod._REGISTRY["scratch"]
+
+
+def test_malformed_kind_name_raises():
+    with pytest.raises(ValueError, match="non-empty string"):
+        register_kind(_dummy_kind(""))
+    with pytest.raises(ValueError, match="non-empty string"):
+        register_kind(_dummy_kind(None))
+
+
+def test_registered_kinds_order_and_peek():
+    ks = registered_kinds()
+    assert ks.index("maxflow") < ks.index("assignment") < ks.index(
+        "matching")
+    # peek mode never shrinks the view once the builtins are in
+    assert set(registered_kinds(ensure=False)) == set(ks)
+    assert get_kind("maxflow").name == "maxflow"
+
+
+# ------------------------------------------------------ deprecation shims
+
+def test_engine_deprecated_solver_kwargs_map_to_solver_kw():
+    with pytest.warns(DeprecationWarning, match="maxflow_kw"):
+        eng = SolverEngine(maxflow_kw={"backend": "xla"})
+    assert eng.solver_kw == {"maxflow": {"backend": "xla"}}
+    with pytest.warns(DeprecationWarning, match="assignment_kw"):
+        eng = SolverEngine(solver_kw={"matching": {"max_rounds": 5}},
+                           assignment_kw={"alpha": 4})
+    assert eng.solver_kw == {"matching": {"max_rounds": 5},
+                             "assignment": {"alpha": 4}}
+
+
+def test_engine_deprecated_submit_shims_delegate():
+    rng = np.random.default_rng(0)
+    eng = SolverEngine()
+    with pytest.warns(DeprecationWarning, match="submit_maxflow"):
+        t0 = eng.submit_maxflow(_prob(rng))
+    with pytest.warns(DeprecationWarning, match="submit_assignment"):
+        t1 = eng.submit_assignment(rng.integers(0, 9, (4, 4)))
+    out = eng.flush()
+    assert sorted(out) == [t0, t1]
+    assert bool(out[t0].converged) and bool(out[t1].converged)
+    # the shims still validate (delegation, not a bypass)
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="malformed assignment"):
+            eng.submit_assignment(np.ones((3, 4)))
+
+
+@pytest.mark.serve
+def test_async_engine_deprecated_shims_delegate():
+    from repro.serve.scheduler import AsyncSolverEngine
+    rng = np.random.default_rng(1)
+    with pytest.warns(DeprecationWarning, match="maxflow_kw"):
+        eng = AsyncSolverEngine(max_batch=2, max_delay_ms=600_000.0,
+                                maxflow_kw={"backend": "xla"})
+    with eng:
+        with pytest.warns(DeprecationWarning, match="submit_maxflow"):
+            f0 = eng.submit_maxflow(_prob(rng))
+        with pytest.warns(DeprecationWarning, match="submit_assignment"):
+            f1 = eng.submit_assignment(rng.integers(0, 9, (4, 4)))
+        eng.flush_now()
+        assert bool(f0.result(timeout=120.0).converged)
+        assert bool(f1.result(timeout=120.0).converged)

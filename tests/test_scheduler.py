@@ -36,7 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-import repro.serve.engine as engine_mod
+import repro.core.kinds as kinds_mod
 from repro.core.assignment.cost_scaling import solve_assignment
 from repro.core.batch import solve_maxflow_batch
 from repro.core.maxflow.grid import GridProblem, maxflow_grid
@@ -114,8 +114,8 @@ def _bitmatch_stream(async_kw: dict, sync_kw: dict, chunk: int = 4):
           for i in range(chunk)]
     with AsyncSolverEngine(max_batch=chunk,
                            max_delay_ms=LONG_DEADLINE_MS, **async_kw) as eng:
-        f_futs = [eng.submit_maxflow(p) for p in probs]
-        a_futs = [eng.submit_assignment(w) for w in ws]
+        f_futs = [eng.submit("maxflow", p) for p in probs]
+        a_futs = [eng.submit("assignment", w) for w in ws]
         eng.flush_now()                  # the assignment chunk is short
         f_res = [f.result(timeout=WAIT_S) for f in f_futs]
         a_res = [f.result(timeout=WAIT_S) for f in a_futs]
@@ -123,10 +123,10 @@ def _bitmatch_stream(async_kw: dict, sync_kw: dict, chunk: int = 4):
     sync = SolverEngine(**sync_kw)
     base_f, base_a = [], []
     for lo in range(0, len(probs), chunk):
-        ts = [sync.submit_maxflow(p) for p in probs[lo:lo + chunk]]
+        ts = [sync.submit("maxflow", p) for p in probs[lo:lo + chunk]]
         out = sync.flush()
         base_f += [out[t] for t in ts]
-    ts = [sync.submit_assignment(w) for w in ws]
+    ts = [sync.submit("assignment", w) for w in ws]
     out = sync.flush()
     base_a += [out[t] for t in ts]
 
@@ -173,7 +173,7 @@ def test_async_bitmatch_ragged_exact_bucket():
              for h, w in shapes]
     with AsyncSolverEngine(max_batch=3, max_delay_ms=LONG_DEADLINE_MS,
                            bucket="exact", dispatch="masked") as eng:
-        futs = [eng.submit_maxflow(p) for p in probs]
+        futs = [eng.submit("maxflow", p) for p in probs]
         res = [f.result(timeout=WAIT_S) for f in futs]
     for got, p in zip(res, probs):
         single = maxflow_grid(p)
@@ -191,7 +191,7 @@ def test_deadline_trigger_completes_without_flush():
     [p] = _grid_problems(4, 1, 8, 8)
     with AsyncSolverEngine(max_batch=64, max_delay_ms=250.0) as eng:
         t0 = time.monotonic()
-        fut = eng.submit_maxflow(p)
+        fut = eng.submit("maxflow", p)
         res = fut.result(timeout=WAIT_S)
         elapsed = time.monotonic() - t0
         snap = eng.metrics.snapshot()
@@ -207,7 +207,7 @@ def test_size_trigger_fires_at_max_batch():
     with AsyncSolverEngine(max_batch=4,
                            max_delay_ms=LONG_DEADLINE_MS) as eng:
         eng.flush_now()          # empty queue: must NOT arm a stale manual
-        futs = [eng.submit_maxflow(p) for p in probs]
+        futs = [eng.submit("maxflow", p) for p in probs]
         res = [f.result(timeout=WAIT_S) for f in futs]
         snap = eng.metrics.snapshot()
     assert all(bool(r.converged) for r in res)
@@ -223,7 +223,7 @@ def test_size_trigger_fires_at_max_batch():
 def test_shutdown_drains_pending_futures():
     probs = _grid_problems(6, 3, 8, 8)
     eng = AsyncSolverEngine(max_batch=64, max_delay_ms=LONG_DEADLINE_MS)
-    futs = [eng.submit_maxflow(p) for p in probs]
+    futs = [eng.submit("maxflow", p) for p in probs]
     eng.close(drain=True)                # must not hang, must resolve all
     for f in futs:
         assert bool(f.result(timeout=1.0).converged)
@@ -234,12 +234,12 @@ def test_shutdown_drains_pending_futures():
 def test_shutdown_cancels_when_not_draining():
     probs = _grid_problems(7, 2, 8, 8)
     eng = AsyncSolverEngine(max_batch=64, max_delay_ms=LONG_DEADLINE_MS)
-    futs = [eng.submit_maxflow(p) for p in probs]
+    futs = [eng.submit("maxflow", p) for p in probs]
     eng.close(drain=False)
     assert all(f.cancelled() for f in futs)
     assert eng.metrics.snapshot()["tickets"]["cancelled"] == 2
     with pytest.raises(RuntimeError, match="closed"):
-        eng.submit_maxflow(probs[0])
+        eng.submit("maxflow", probs[0])
 
 
 def test_submit_validates_before_future_exists():
@@ -247,9 +247,9 @@ def test_submit_validates_before_future_exists():
     bad = GridProblem(good.cap_nbr, -good.cap_src, good.cap_sink)
     with AsyncSolverEngine(max_batch=4, max_delay_ms=LONG_DEADLINE_MS) as eng:
         with pytest.raises(ValueError, match="negative"):
-            eng.submit_maxflow(bad)
+            eng.submit("maxflow", bad)
         with pytest.raises(ValueError, match="malformed assignment"):
-            eng.submit_assignment(np.ones((3, 4)))
+            eng.submit("assignment", np.ones((3, 4)))
         assert eng.pending() == 0
         assert eng.metrics.snapshot()["tickets"].get("submitted", 0) == 0
 
@@ -261,15 +261,16 @@ def test_poisoned_request_fails_only_its_own_future(monkeypatch):
     every batch-mate still resolves with a correct result."""
     POISON = 777
 
-    real = engine_mod.solve_prepared_assignment
+    real = kinds_mod.get_kind("assignment")
 
     def maybe_boom(prep, **kw):
         if any(int(np.asarray(o).ravel()[0]) == POISON
                for o in prep.originals):
             raise RuntimeError("poisoned dispatch")
-        return real(prep, **kw)
+        return real.solve_prepared(prep, **kw)
 
-    monkeypatch.setattr(engine_mod, "solve_prepared_assignment", maybe_boom)
+    monkeypatch.setitem(kinds_mod._REGISTRY, "assignment",
+                        real._replace(solve_prepared=maybe_boom))
 
     rng = np.random.default_rng(9)
     ws = [rng.integers(0, 50, (5, 5)) for _ in range(3)]
@@ -277,7 +278,7 @@ def test_poisoned_request_fails_only_its_own_future(monkeypatch):
     poisoned.flat[0] = POISON
     stream = [ws[0], poisoned, ws[2]]
     with AsyncSolverEngine(max_batch=3, max_delay_ms=LONG_DEADLINE_MS) as eng:
-        futs = [eng.submit_assignment(w) for w in stream]
+        futs = [eng.submit("assignment", w) for w in stream]
         with pytest.raises(RuntimeError, match="poisoned"):
             futs[1].result(timeout=WAIT_S)
         for f, w in ((futs[0], ws[0]), (futs[2], ws[2])):
@@ -299,7 +300,7 @@ def test_adaptive_dispatch_chooses_compaction_on_ragged_stream():
                            dispatch="adaptive", spread_threshold=0.1,
                            min_compact_batch=2) as eng:
         for lo in range(0, len(probs), 4):
-            futs = [eng.submit_maxflow(p) for p in probs[lo:lo + 4]]
+            futs = [eng.submit("maxflow", p) for p in probs[lo:lo + 4]]
             [f.result(timeout=WAIT_S) for f in futs]   # serialize chunks
         m = eng.metrics
         spread = m.convergence.spread("maxflow")
@@ -319,7 +320,7 @@ def test_adaptive_dispatch_stays_masked_on_uniform_stream():
                            dispatch="adaptive", spread_threshold=0.1,
                            min_compact_batch=2) as eng:
         for lo in range(0, len(probs), 4):
-            futs = [eng.submit_maxflow(p) for p in probs[lo:lo + 4]]
+            futs = [eng.submit("maxflow", p) for p in probs[lo:lo + 4]]
             [f.result(timeout=WAIT_S) for f in futs]
         assert eng.metrics.dispatch_count("maxflow", "compacted") == 0
 
@@ -328,7 +329,7 @@ def test_forced_dispatch_override():
     probs = _grid_problems(12, 4, 8, 8)
     with AsyncSolverEngine(max_batch=4, max_delay_ms=LONG_DEADLINE_MS,
                            dispatch="compacted") as eng:
-        futs = [eng.submit_maxflow(p) for p in probs]
+        futs = [eng.submit("maxflow", p) for p in probs]
         [f.result(timeout=WAIT_S) for f in futs]
         assert eng.metrics.dispatch_count("maxflow", "masked") == 0
         assert eng.metrics.dispatch_count("maxflow", "compacted") >= 1

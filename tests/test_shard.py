@@ -167,8 +167,8 @@ def test_solver_engine_matches_direct_front_end():
              for h, w in [(6, 6), (4, 5), (6, 6)]]
     ws = [rng.integers(0, 50, (n, n)) for n in (5, 7)]
 
-    tickets = [engine.submit_maxflow(p) for p in probs]
-    tickets += [engine.submit_assignment(w) for w in ws]
+    tickets = [engine.submit("maxflow", p) for p in probs]
+    tickets += [engine.submit("assignment", w) for w in ws]
     assert engine.pending() == 5
     out = engine.flush()
     assert engine.pending() == 0 and sorted(out) == tickets
@@ -184,14 +184,14 @@ def test_solver_engine_rejects_malformed_at_submit():
     hold an entry that would wedge flush(); good tickets are unaffected."""
     engine = SolverEngine()
     rng = np.random.default_rng(0)
-    t = engine.submit_maxflow(
+    t = engine.submit("maxflow", 
         GridProblem(*map(jnp.asarray, random_grid_problem(rng, 4, 4))))
     with pytest.raises(ValueError, match="malformed assignment"):
-        engine.submit_assignment(np.ones((3, 4)))       # non-square
+        engine.submit("assignment", np.ones((3, 4)))       # non-square
     with pytest.raises(ValueError, match="malformed assignment"):
-        engine.submit_assignment(np.ones((3, 3)))       # non-integer
+        engine.submit("assignment", np.ones((3, 3)))       # non-integer
     with pytest.raises(ValueError, match="malformed grid"):
-        engine.submit_maxflow(GridProblem(
+        engine.submit("maxflow", GridProblem(
             jnp.zeros((4, 5, 5)), jnp.zeros((5, 4)), jnp.zeros((5, 4))))
     assert engine.pending() == 1
     out = engine.flush()                                # still solvable
