@@ -320,6 +320,86 @@ def bench_serving(rows, repeats=2):
                      + extra))
 
 
+@bench("refill")
+def bench_refill(rows, repeats=2):
+    """Continuous batching vs closed batches on a ragged Poisson stream.
+
+    The same recorded request stream — ragged-convergence grid cuts with
+    Poisson inter-arrival gaps — is served twice through the async
+    scheduler with the compacted driver forced:
+
+      * ``refill_stream_closed`` — refill off: each flushed chunk drains
+        as a closed compacted batch, so slots vacated by early-converging
+        instances idle until the chunk's straggler finishes.
+      * ``refill_stream_refill`` — ``refill=True``: freed slots are
+        re-seeded from the pending queue at cycle boundaries
+        (``repro.core.refill``), so the batch stays near capacity while
+        requests keep arriving.
+
+    The headline derived column is ``slot_occupancy``: mean live
+    instances per compacted cycle over capacity (the closed path's
+    ``compact_live_mean / max_batch``; the refill path's
+    ``refill.utilization`` — the same per-cycle measure recorded by the
+    session trace).  Steady-state occupancy must be strictly higher with
+    refill; throughput and the admitted/session counts ride along.
+    Numbers land in benchmarks/RESULTS_refill.md
+    (``python -m benchmarks.run refill``).
+    """
+    from repro.core.maxflow.grid import GridProblem
+    from repro.core.maxflow.ref import random_grid_problem
+    from repro.serve.scheduler import AsyncSolverEngine
+
+    rng = np.random.default_rng(0)
+    hw, B, cap = 64, 48, 8
+    probs = []
+    for i in range(B):
+        capn, cs, ct = random_grid_problem(rng, hw, hw, max_cap=20,
+                                           terminal_density=0.3)
+        if i % 4:   # 3 of 4 easy -> slots free early within every batch
+            cs = np.minimum(cs, 1.0)
+        probs.append(GridProblem(*map(jnp.asarray, (capn, cs, ct))))
+    # one fixed Poisson arrival schedule, replayed identically both ways
+    gaps = rng.exponential(0.002, B)
+
+    def serve(refill):
+        with AsyncSolverEngine(max_batch=cap, max_delay_ms=20.0,
+                               dispatch="compacted", refill=refill,
+                               n_lanes=2) as eng:
+            futs = []
+            for p, gap in zip(probs, gaps):
+                time.sleep(gap)
+                futs.append(eng.submit("maxflow", p))
+            for f in futs:
+                f.result(timeout=600)
+            return eng.metrics.snapshot()
+
+    results = {}
+    for name, refill in (("closed", False), ("refill", True)):
+        serve(refill)                 # compile
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            snap = serve(refill)
+        us = (time.perf_counter() - t0) / repeats * 1e6
+        if refill:
+            occ = snap["refill"]["utilization"]
+            extra = (f";admitted="
+                     f"{sum(snap['refill']['admitted'].values())}"
+                     f";sessions="
+                     f"{sum(snap['refill']['sessions'].values())}")
+        else:
+            occ = snap["compact_live_mean"] / cap
+            extra = ""
+        results[name] = (us, occ)
+        rows.append((f"refill_stream_{name}", us,
+                     f"inst_per_s={B / us * 1e6:.1f};"
+                     f"slot_occupancy={occ:.3f}" + extra))
+    us_c, occ_c = results["closed"]
+    us_r, occ_r = results["refill"]
+    rows.append(("refill_stream_gain", us_c - us_r,
+                 f"occupancy_gain={occ_r / occ_c:.2f}x;"
+                 f"speedup_vs_closed={us_c / us_r:.2f}x"))
+
+
 @bench("assignment", kind="assignment")
 def bench_assignment(rows, repeats=2):
     """Paper §6: n<=30, costs<=100, ~1/20 s on a GTX 560 Ti."""

@@ -64,6 +64,7 @@ from repro.core.assignment.cost_scaling import (AssignmentResult,
 from repro.core.kinds import SolverKind, get_kind, register_kind
 from repro.core.maxflow.grid import (GridFlowResult, GridProblem,
                                      maxflow_grid_batch)
+from repro.core.refill import RefillRuntime
 
 __all__ = [
     "pad_grid_problem", "stack_grid_problems", "pad_cost_matrix",
@@ -587,8 +588,108 @@ def _maxflow_loop_spec(*, rounds_per_heuristic: int = 32,
                       backend)
 
 
+def _maxflow_refill(*, rounds_per_heuristic: int = 32,
+                    max_rounds: int = 100_000, bfs_max_iters: int = 0,
+                    backend: str = "xla") -> RefillRuntime:
+    """The ``"maxflow"`` kind's continuous-batching runtime
+    (``repro.core.refill``): the same cached spec / jitted init+finalize
+    the compacted batch driver uses, so a refilled instance's trajectory
+    bit-matches its closed-batch solve.  Problems use the public
+    (B, 4, H, W) layout; init/finalize own the internal direction-axis
+    moveaxis exactly as ``_grid_batch_compact`` does."""
+    from repro.core.maxflow.grid import (_grid_finalize_jit, _grid_init_jit,
+                                         _grid_spec)
+    spec = _grid_spec(rounds_per_heuristic, max_rounds, bfs_max_iters,
+                      backend)
+
+    def pad_one(problem: GridProblem, shape) -> GridProblem:
+        H, W = shape
+        return stack_grid_problems([pad_grid_problem(problem, H, W)])
+
+    def init(stacked: GridProblem):
+        return _grid_init_jit(
+            jnp.moveaxis(jnp.asarray(stacked.cap_nbr), 1, 0),
+            jnp.asarray(stacked.cap_src), jnp.asarray(stacked.cap_sink),
+            bfs_max_iters=bfs_max_iters)
+
+    def finalize(stacked, state, rounds) -> GridFlowResult:
+        res = _grid_finalize_jit(state, rounds,
+                                 bfs_max_iters=bfs_max_iters)
+        return res._replace(state=res.state._replace(
+            cap=jnp.moveaxis(res.state.cap, 0, 1)))
+
+    def crop(res: GridFlowResult, shape, original) -> GridFlowResult:
+        h, w = shape
+        st = res.state
+        return GridFlowResult(
+            flow=res.flow[0], cut=res.cut[0, :h, :w],
+            state=st._replace(
+                e=st.e[0, :h, :w], h=st.h[0, :h, :w],
+                cap=st.cap[0, :, :h, :w], cap_src=st.cap_src[0, :h, :w],
+                cap_sink=st.cap_sink[0, :h, :w],
+                sink_flow=st.sink_flow[0], src_flow=st.src_flow[0]),
+            rounds=res.rounds[0], converged=res.converged[0])
+
+    def shape_of(problem: GridProblem) -> tuple:
+        return tuple(np.asarray(jnp.asarray(problem.cap_src)).shape)
+
+    return RefillRuntime(spec=spec, pad_one=pad_one, init=init,
+                         finalize=finalize, crop=crop, shape_of=shape_of)
+
+
 def _assignment_inert(shape: tuple) -> jax.Array:
     return inert_cost_matrix(*shape)
+
+
+def _assignment_refill(*, method: str = "auction", alpha: int = 10,
+                       max_rounds: int = 200_000,
+                       rounds_per_heuristic: int = 16,
+                       use_price_update: bool = True,
+                       use_arc_fixing: bool = True,
+                       backend: str = "xla") -> RefillRuntime:
+    """The ``"assignment"`` kind's continuous-batching runtime: bonus-
+    shifted padding on the way in (``pad_cost_matrix``), weight recomputed
+    on the ORIGINAL costs on the way out — exactly the
+    ``solve_prepared_assignment`` crop, per instance."""
+    from repro.core.assignment.cost_scaling import (_assignment_finalize_jit,
+                                                    _assignment_spec,
+                                                    _scale_init_jit)
+    spec = _assignment_spec(method, alpha, max_rounds, rounds_per_heuristic,
+                            use_price_update, use_arc_fixing, backend)
+
+    def pad_one(w, shape):
+        (m,) = shape
+        return pad_cost_matrix(w, m)[0][None]
+
+    def init(stacked):
+        return _scale_init_jit(jnp.asarray(stacked, jnp.int32), alpha=alpha)
+
+    def finalize(stacked, state, rounds) -> AssignmentResult:
+        # the solver's own per-instance round/push counters live in the
+        # state; the driver-side rounds argument is unused (as in the
+        # closed-batch path)
+        return _assignment_finalize_jit(jnp.asarray(stacked, jnp.int32),
+                                        state.st)
+
+    def crop(res: AssignmentResult, shape, original) -> AssignmentResult:
+        (n,) = shape
+        col = res.col_of_row[0, :n]
+        valid = col < n          # unconverged rows may hold dummy cols
+        picked = jnp.take_along_axis(
+            jnp.asarray(original, jnp.int32),
+            jnp.minimum(col, n - 1)[:, None], axis=1)[:, 0]
+        weight = jnp.sum(jnp.where(valid, picked, 0))
+        return AssignmentResult(
+            col_of_row=col, weight=weight,
+            p_x=res.p_x[0, :n], p_y=res.p_y[0, :n],
+            rounds=res.rounds[0], pushes=res.pushes[0],
+            relabels=res.relabels[0], converged=res.converged[0])
+
+    def shape_of(w) -> tuple:
+        return (int(np.asarray(w).shape[-1]),)
+
+    return RefillRuntime(spec=spec, pad_one=pad_one, init=init,
+                         finalize=finalize, crop=crop, shape_of=shape_of)
 
 
 def _assignment_loop_spec(*, method: str = "auction", alpha: int = 10,
@@ -611,6 +712,7 @@ register_kind(SolverKind(
     prepare_buckets=prepare_maxflow_buckets,
     solve_prepared=solve_prepared_maxflow,
     loop_spec=_maxflow_loop_spec,
+    refill=_maxflow_refill,
 ))
 
 register_kind(SolverKind(
@@ -620,4 +722,5 @@ register_kind(SolverKind(
     prepare_buckets=prepare_assignment_buckets,
     solve_prepared=solve_prepared_assignment,
     loop_spec=_assignment_loop_spec,
+    refill=_assignment_refill,
 ))

@@ -30,6 +30,12 @@ A ``SolverKind`` bundles:
   factory (``repro.core.solver_loop``); exposed so callers can drive the
   loop runtime directly (and so the registry documents where the kind's
   cycle actually lives).
+* ``refill(**static_kw) -> RefillRuntime`` — OPTIONAL (default ``None``):
+  the kind's continuous-batching runtime (``repro.core.refill``) — the
+  pad-one/init/finalize/crop pieces that let the serving layer admit new
+  instances of this kind into an in-flight compacted solve at cycle
+  boundaries.  Kinds without one still serve through the closed-batch
+  path everywhere.
 
 This module imports neither jax nor the solver packages at import time —
 the registry stays importable from anywhere (``repro.serve.metrics``
@@ -55,6 +61,9 @@ class SolverKind(NamedTuple):
     prepare_buckets: Callable[..., list]
     solve_prepared: Callable[..., tuple]
     loop_spec: Callable[..., Any]
+    # optional: the kind's continuous-batching runtime factory
+    # (repro.core.refill.RefillRuntime); None = closed-batch only
+    refill: Callable[..., Any] | None = None
 
 
 _REGISTRY: dict[str, SolverKind] = {}

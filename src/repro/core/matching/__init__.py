@@ -32,6 +32,7 @@ import numpy as np
 from repro.core.batch import (BucketStats, PreparedBucket, _make_buckets,
                               _stats)
 from repro.core.kinds import SolverKind, register_kind
+from repro.core.refill import RefillRuntime
 from repro.core.matching.bfs import (MatchingResult, _matching_spec,
                                      match_bipartite, match_bipartite_batch)
 from repro.core.matching.ref import hopcroft_karp
@@ -186,6 +187,42 @@ def _matching_loop_spec(*, max_rounds: int = 10_000, backend: str = "xla"):
     return _matching_spec(max_rounds, backend)
 
 
+def _matching_refill(*, max_rounds: int = 10_000, greedy_init: bool = True,
+                     backend: str = "xla") -> RefillRuntime:
+    """The ``"matching"`` kind's continuous-batching runtime
+    (``repro.core.refill``): isolated-vertex padding in, match-vector crop
+    out — the same jitted init/finalize as ``_match_batch_compact``, so a
+    refilled instance bit-matches its closed-batch solve."""
+    from repro.core.matching.bfs import (_match_finalize_jit, _match_init_jit,
+                                         _matching_spec)
+    spec = _matching_spec(max_rounds, backend)
+
+    def pad_one(adj, shape):
+        NL, NR = shape
+        return jnp.asarray(pad_matching_problem(adj, NL, NR))[None]
+
+    def init(stacked):
+        return _match_init_jit(jnp.asarray(stacked, jnp.bool_),
+                               greedy_init=greedy_init)
+
+    def finalize(stacked, state, rounds) -> MatchingResult:
+        return _match_finalize_jit(state, rounds)
+
+    def crop(res: MatchingResult, shape, original) -> MatchingResult:
+        nl, nr = shape
+        return MatchingResult(
+            match_row=res.match_row[0, :nl],
+            match_col=res.match_col[0, :nr],
+            cardinality=res.cardinality[0],
+            rounds=res.rounds[0], converged=res.converged[0])
+
+    def shape_of(adj) -> tuple:
+        return tuple(np.asarray(adj).shape)
+
+    return RefillRuntime(spec=spec, pad_one=pad_one, init=init,
+                         finalize=finalize, crop=crop, shape_of=shape_of)
+
+
 register_kind(SolverKind(
     name="matching",
     validate=validate_matching_problem,
@@ -193,4 +230,5 @@ register_kind(SolverKind(
     prepare_buckets=prepare_matching_buckets,
     solve_prepared=solve_prepared_matching,
     loop_spec=_matching_loop_spec,
+    refill=_matching_refill,
 ))

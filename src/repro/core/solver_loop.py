@@ -39,6 +39,18 @@ then happens within each lane only: instances never migrate between shards
 and no collectives are introduced, preserving the shard-independence
 contract of the mesh path.  Lane dispatches are issued before any liveness
 mask is fetched, so devices run their cycles concurrently.
+
+Continuous batching: ``run_compacted`` additionally accepts a REFILL hook
+(``refill=``) — the cycle boundary where the host already re-gathers the
+live set is also where a caller may inject NEW instances into slots
+vacated by converged ones, instead of letting freed slots idle until the
+whole batch drains (the admit-each-step structure of continuous-batching
+LLM servers, applied to round-synchronous solvers).  Because admitted
+instances enter with a fresh rounds counter and the cycles are
+per-instance pure, a refilled run executes every instance's exact
+solo-solve trajectory: values AND counters bit-match a loop of single
+solves (tests/test_refill.py).  ``repro.core.refill`` wraps the hook
+protocol into a per-kind session object.
 """
 from __future__ import annotations
 
@@ -171,7 +183,59 @@ def _live_mask(spec: LoopSpec, state, rounds):
     return spec.live(state, rounds)
 
 
-def run_compacted(spec: LoopSpec, state, n_instances: int, *, lanes=None):
+def _emit_slot(spec: LoopSpec, refill, token, lane_state, slot: int,
+               rounds_val: int) -> None:
+    """Hand one finished instance (a batch-1 gather of its slot) to the hook."""
+    refill.emit(token, _tree_take(spec, lane_state, jnp.asarray([slot])),
+                rounds_val)
+
+
+def _admit_free(spec: LoopSpec, refill, lanes, lane_states, rounds,
+                slot_token: list, live_idx: list, free_idx: list) -> None:
+    """Offer freed slots to the refill hook until it declines or slots run out.
+
+    Each admitted ``(token, state1)`` pair is scattered into the first free
+    slot (device_put to the lane's device first, matching the initial
+    placement), its rounds counter reset to 0, and its liveness evaluated
+    EXACTLY as an initial instance's would be — born-dead admissions are
+    emitted immediately with ``rounds == 0`` and never run a cycle, so an
+    admitted instance's trajectory is indistinguishable from a solo solve.
+    """
+    while True:
+        n_free = int(sum(f.size for f in free_idx))
+        if n_free == 0:
+            return
+        new = refill.admit(n_free)
+        if not new:
+            return
+        if len(new) > n_free:
+            raise ValueError(
+                f"refill.admit({n_free}) returned {len(new)} admissions; "
+                f"it must return at most n_free")
+        for token, st1 in new:
+            i = next(j for j, f in enumerate(free_idx) if f.size)
+            s = int(free_idx[i][0])
+            free_idx[i] = free_idx[i][1:]
+            lo, hi, dev = lanes[i]
+            if dev is not None:
+                st1 = jax.device_put(st1, dev)
+            lane_states[i] = _tree_put(spec, lane_states[i],
+                                       jnp.asarray([s]), st1)
+            rounds[lo + s] = 0
+            slot_token[lo + s] = token
+            lv = _live_mask(spec, st1, jnp.zeros(1, jnp.int32))
+            if bool(np.asarray(lv)[0]):
+                live_idx[i] = np.sort(np.concatenate(
+                    [live_idx[i],
+                     np.asarray([s], dtype=live_idx[i].dtype)]))
+            else:
+                _emit_slot(spec, refill, token, lane_states[i], s, 0)
+                free_idx[i] = np.concatenate(
+                    [free_idx[i], np.asarray([s], dtype=free_idx[i].dtype)])
+
+
+def run_compacted(spec: LoopSpec, state, n_instances: int, *, lanes=None,
+                  refill=None):
     """Early-exit compaction over a 1-D batch axis of ``n_instances``.
 
     Between jitted cycle segments the host gathers still-live instances
@@ -189,13 +253,38 @@ def run_compacted(spec: LoopSpec, state, n_instances: int, *, lanes=None):
         ``repro.launch.mesh.compact_lanes``).  Each lane compacts
         independently on its device; instances never cross lanes.  Default:
         one lane covering the whole batch on the default device.
+      refill: optional CONTINUOUS-BATCHING hook — an object with
+
+        * ``admit(n_free) -> [(token, state1), ...]`` — called at every
+          cycle boundary where slots are free (including before cycle 0 for
+          instances that are born converged); returns at most ``n_free``
+          new instances, each a caller-chosen token plus a batch-1 solver
+          state (the kind's ``init`` of one padded problem).  Returning
+          ``[]`` declines; the loop ends when nothing is live and the hook
+          declines.
+        * ``emit(token, state1, rounds)`` — called EXACTLY ONCE per
+          instance, the moment it leaves the live set (converged or
+          rounds-capped), with a batch-1 gather of its final state and its
+          solo-accounting rounds counter.  Initial instances are emitted
+          with their batch index as the token; admitted instances with the
+          token ``admit`` returned.  Born-dead instances (initial or
+          admitted) emit immediately with ``rounds == 0``.
+
+        Admitted instances enter with a fresh rounds counter into the SAME
+        gather/cycle/scatter machinery, so every emitted trajectory —
+        values and counters — bit-matches that instance's solo solve
+        (tests/test_refill.py).  ``refill=None`` (default) is exactly the
+        closed-batch behaviour.
 
     Returns ``(state, rounds)`` — same contract as ``run_masked``; results
-    bit-match it (tests/test_compact.py).
+    bit-match it (tests/test_compact.py).  With ``refill`` the returned
+    arrays describe the final slot OCCUPANTS (useful only for debugging) —
+    per-instance results arrive through ``emit``.
     """
     if lanes is None:
         lanes = [(0, n_instances, None)]
     rounds = np.zeros(n_instances, np.int32)
+    slot_token: list = list(range(n_instances))
 
     # Split into per-lane states (pinned to the lane's device, if any) and
     # evaluate initial liveness; fetch masks only after every lane has
@@ -209,6 +298,20 @@ def run_compacted(spec: LoopSpec, state, n_instances: int, *, lanes=None):
         masks.append(_live_mask(spec, sub, jnp.zeros(hi - lo, jnp.int32)))
     for m in masks:
         live_idx.append(np.nonzero(np.asarray(m))[0])
+
+    free_idx: list = []
+    if refill is not None:
+        # born-dead initial instances emit immediately (rounds = 0) and
+        # free their slots for admission before the first cycle
+        for i, (lo, hi, dev) in enumerate(lanes):
+            dead = np.setdiff1d(np.arange(hi - lo, dtype=np.int64),
+                                live_idx[i])
+            for s in dead:
+                _emit_slot(spec, refill, slot_token[lo + int(s)],
+                           lane_states[i], int(s), 0)
+            free_idx.append(dead)
+        _admit_free(spec, refill, lanes, lane_states, rounds, slot_token,
+                    live_idx, free_idx)
 
     trace = _cycle_trace.get()
     cycle = 0
@@ -237,8 +340,20 @@ def run_compacted(spec: LoopSpec, state, n_instances: int, *, lanes=None):
             if lv is None:
                 continue
             li = live_idx[i]
-            rounds[lanes[i][0] + li] += spec.rounds_per_cycle
-            live_idx[i] = li[np.asarray(lv)[:li.size]]
+            lo = lanes[i][0]
+            rounds[lo + li] += spec.rounds_per_cycle
+            keep_mask = np.asarray(lv)[:li.size]
+            live_idx[i] = li[keep_mask]
+            if refill is not None:
+                done = li[~keep_mask]
+                for s in done:
+                    _emit_slot(spec, refill, slot_token[lo + int(s)],
+                               lane_states[i], int(s),
+                               int(rounds[lo + int(s)]))
+                free_idx[i] = np.concatenate([free_idx[i], done])
+        if refill is not None:
+            _admit_free(spec, refill, lanes, lane_states, rounds,
+                        slot_token, live_idx, free_idx)
 
     # Reassemble in input order (lanes are contiguous, ordered slices).
     if len(lane_states) > 1:

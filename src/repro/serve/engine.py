@@ -240,7 +240,9 @@ class SolverEngine:
         queue returns ``{}`` without dispatching. If one kind's batch
         raises, kinds that already completed stay delivered (returned by
         the next flush, not re-solved) and only the failing kind remains
-        queued.
+        queued. Requests submitted WHILE a flush is solving are never
+        dropped: they stay queued for the next flush, and the returned
+        dict is ticket-ordered.
         """
         for kind in list(self._queues):
             q = self._queues[kind]
@@ -250,9 +252,28 @@ class SolverEngine:
             res = self.solve_requests(kind, list(payloads),
                                       stats_out=stats_out)
             self._ready.update(zip(tickets, res))
-            q.clear()
-        out, self._ready = self._ready, {}
+            # Drop exactly the entries this flush solved — NOT q.clear():
+            # a submit that lands while solve_requests is running (e.g.
+            # from a callback or another thread) appends behind the
+            # snapshot, and clearing would silently discard it.
+            del q[:len(tickets)]
+        out, self._ready = dict(sorted(self._ready.items())), {}
         return out
+
+    def refill_session(self, kind: str, *, shape, capacity: int,
+                       **overrides):
+        """A continuous-batching session of ``kind`` on this engine's mesh.
+
+        Builds a ``repro.core.refill.RefillSolver`` carrying the engine's
+        mesh/mesh_axis and per-kind ``solver_kw`` (so the deprecated
+        ``maxflow_kw`` / ``assignment_kw`` spellings flow into the refill
+        path too); ``overrides`` take precedence.  Raises ``ValueError``
+        for kinds without a registered refill runtime.
+        """
+        from repro.core.refill import RefillSolver
+        kw = {**self.solver_kw.get(kind, {}), **overrides}
+        return RefillSolver(kind, shape=shape, capacity=capacity,
+                            mesh=self.mesh, mesh_axis=self.mesh_axis, **kw)
 
 
 def greedy_generate(cfg, params, axes, shd, prompt_tokens, max_new: int,

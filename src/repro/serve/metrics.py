@@ -124,6 +124,11 @@ class SchedulerMetrics:
     EWMA (real instances / max_batch), convergence-spread EWMA, and the
     compacted driver's live-count decay (via
     ``repro.core.solver_loop.trace_cycles``).
+
+    Continuous batching (``refill`` snapshot key): sessions opened and
+    requests admitted mid-solve per kind, a per-kind slot-occupancy EWMA
+    sampled every refill cycle, and the steady-state batch utilization
+    (mean live/capacity across all refill cycles).
     """
 
     def __init__(self, *, latency_window: int = 1024, ewma_alpha: float = 0.25):
@@ -136,6 +141,12 @@ class SchedulerMetrics:
         self._queue_depth = 0
         self._compact_cycles = 0
         self._compact_live_total = 0
+        self._ewma_alpha = ewma_alpha
+        self._refill_sessions = collections.Counter()
+        self._refill_admitted = collections.Counter()
+        self._refill_cycles = 0
+        self._refill_occ_total = 0.0
+        self._refill_occ_ewma: dict[str, Ewma] = {}
 
     # ---- recording hooks (submit path / scheduler / lanes) --------------
 
@@ -171,6 +182,30 @@ class SchedulerMetrics:
             self._compact_cycles += 1
             self._compact_live_total += n_live
 
+    def record_refill_session(self, kind: str) -> None:
+        """One continuous-batching session opened for ``kind``."""
+        with self._lock:
+            self._refill_sessions[kind] += 1
+
+    def record_refill_admit(self, kind: str, n: int) -> None:
+        """``n`` queued requests admitted mid-solve into a ``kind`` session."""
+        with self._lock:
+            self._refill_admitted[kind] += n
+
+    def record_refill_cycle(self, kind: str, occupancy: float) -> None:
+        """Per-cycle slot occupancy (live / capacity) of a refill session.
+
+        Feeds both the steady-state utilization mean and a per-kind EWMA —
+        the continuous-batching analogue of the closed-batch occupancy
+        gauge, but sampled every CYCLE rather than once per dispatch, so it
+        reflects how full the batch stays between admissions.
+        """
+        with self._lock:
+            self._refill_cycles += 1
+            self._refill_occ_total += float(occupancy)
+            self._refill_occ_ewma.setdefault(
+                kind, Ewma(self._ewma_alpha)).update(occupancy)
+
     # ---- reading --------------------------------------------------------
 
     def dispatch_count(self, kind: str, driver: str) -> int:
@@ -192,6 +227,15 @@ class SchedulerMetrics:
                 "compact_live_mean": (
                     self._compact_live_total / self._compact_cycles
                     if self._compact_cycles else None),
+                "refill": {
+                    "sessions": dict(self._refill_sessions),
+                    "admitted": dict(self._refill_admitted),
+                    "slot_occupancy_ewma": {
+                        k: e.value for k, e in self._refill_occ_ewma.items()},
+                    "utilization": (
+                        self._refill_occ_total / self._refill_cycles
+                        if self._refill_cycles else None),
+                },
             }
         kinds = _snapshot_kinds(self.convergence)
         snap["spread_ewma"] = {k: self.convergence.spread(k) for k in kinds}

@@ -23,11 +23,18 @@ synchronous core:
 * per dispatch the scheduler picks the MASKED or COMPACTED solver-loop
   driver adaptively from the EWMA of recent batches' convergence spread,
   tracked PER KIND (``repro.serve.metrics.ConvergenceStats``;
-  ``dispatch=`` forces either driver), and
+  ``dispatch=`` forces either driver);
+* with ``refill=True`` a flushed batch becomes a CONTINUOUS-BATCHING
+  session (``repro.core.refill.RefillSolver``): queued requests of the
+  same kind that fit the session's bucket shape are admitted into slots
+  vacated by converged instances at every cycle boundary — mid-solve, not
+  at the next flush — and each ticket's future resolves the moment ITS
+  instance converges, not at batch drain.  Kinds without a registered
+  refill runtime fall back to the closed-batch path unchanged; and
 * every result is bit-identical to the synchronous ``flush()`` of the
   same queue — the scheduler only decides WHEN and ON WHICH DEVICES the
   tested batch path runs, never what it computes
-  (tests/test_scheduler.py).
+  (tests/test_scheduler.py, tests/test_refill.py).
 
 The scheduler itself is kind-agnostic: queues, triggers, EWMAs, and lane
 dispatch are all keyed by the kind names that actually arrive, so a newly
@@ -56,9 +63,11 @@ from concurrent.futures import Future
 from dataclasses import dataclass, field
 from typing import Any
 
+from repro.core.batch import _bucket_shape
 from repro.core.kinds import get_kind
+from repro.core.refill import refill_runtime
 from repro.core.solver_loop import trace_cycles
-from repro.launch.mesh import scheduler_lanes
+from repro.launch.mesh import scheduler_lanes, shard_count
 from repro.serve.engine import SolverEngine, _merge_deprecated_kw
 from repro.serve.metrics import SchedulerMetrics
 
@@ -108,6 +117,24 @@ def choose_driver(spread_ewma: float | None, n_real: int, *,
             and n_real >= min_batch)
 
 
+def _refill_groups(rt, bucket: str, reqs: list) -> list[tuple[tuple, list]]:
+    """Group a popped batch by session bucket shape.
+
+    The continuous-batching analogue of the kind's ``prepare_buckets``
+    policy: one refill session per bucket shape (``"max"`` → one session
+    at the componentwise max; ``"pow2"`` / ``"exact"`` → one per rounded /
+    exact shape), so every instance a session ever holds shares one
+    compiled cycle ladder.
+    """
+    shapes = [rt.shape_of(r.payload) for r in reqs]
+    max_shape = tuple(max(s[d] for s in shapes)
+                      for d in range(len(shapes[0])))
+    groups: dict[tuple, list] = {}
+    for r, s in zip(reqs, shapes):
+        groups.setdefault(_bucket_shape(s, bucket, max_shape), []).append(r)
+    return list(groups.items())
+
+
 class AsyncSolverEngine:
     """Background-flush solver serving: submit from any thread, get futures.
 
@@ -123,6 +150,14 @@ class AsyncSolverEngine:
         ``"compacted"`` force one driver (the override knob).
       spread_threshold / min_compact_batch / ewma_alpha: adaptive-policy
         tuning — see ``choose_driver`` / ``repro.serve.metrics``.
+      refill: continuous batching (default off). A flushed batch of a
+        kind with a registered refill runtime (``SolverKind.refill``)
+        becomes a ``repro.core.refill.RefillSolver`` session: slots freed
+        by converged instances are refilled MID-SOLVE from the kind's
+        pending queue (requests must fit the session's bucket shape), and
+        futures resolve per instance as each converges. Results stay
+        bit-identical to the closed-batch path (tests/test_refill.py);
+        kinds without a refill runtime serve closed-batch as before.
       n_lanes: dispatch lanes for the host/device pipeline (2 =
         double-buffered). On a mesh with >= n_lanes devices each lane owns
         a disjoint sub-mesh (``repro.launch.mesh.scheduler_lanes``).
@@ -142,6 +177,7 @@ class AsyncSolverEngine:
     def __init__(self, *, max_batch: int = 16, max_delay_ms: float = 50.0,
                  dispatch: str = "adaptive", spread_threshold: float = 0.25,
                  min_compact_batch: int = 4, ewma_alpha: float = 0.25,
+                 refill: bool = False,
                  n_lanes: int = 2, mesh=None, mesh_axis: str | None = None,
                  bucket: str = "max",
                  solver_kw: dict[str, dict] | None = None,
@@ -161,9 +197,14 @@ class AsyncSolverEngine:
         self.spread_threshold = spread_threshold
         self.min_compact_batch = min_compact_batch
         self.metrics = metrics or SchedulerMetrics(ewma_alpha=ewma_alpha)
+        self.refill = bool(refill)
+        self._bucket = bucket
 
         solver_kw = _merge_deprecated_kw(
             solver_kw, maxflow_kw, assignment_kw, "AsyncSolverEngine")
+        self._solver_kw = solver_kw
+        # kind -> RefillRuntime | None (None = closed-batch only), lazy
+        self._refill_rts: dict[str, Any] = {}
         self._lanes = [
             _Lane(engine=SolverEngine(
                 mesh=lane_mesh, mesh_axis=mesh_axis, bucket=bucket,
@@ -319,6 +360,15 @@ class AsyncSolverEngine:
                 self.metrics.record_cancelled(len(reqs) - len(live))
                 if not live:
                     continue
+                rt = self._refill_rt(kind) if self.refill else None
+                if rt is not None:
+                    # continuous batching: one session per bucket shape,
+                    # admission happens inside the lane at cycle boundaries
+                    for bshape, group in _refill_groups(
+                            rt, self._bucket, live):
+                        lane = self._lanes[next(self._rr)]
+                        lane.work.put(("refill", kind, group, bshape))
+                    continue
                 lane = self._lanes[next(self._rr)]
                 try:
                     # HOST stage: pad-and-bucket (overlaps the device solve
@@ -332,7 +382,7 @@ class AsyncSolverEngine:
                     continue
                 # blocks when the lane already holds a staged batch —
                 # bounded hand-off, one staged + one in-flight per lane
-                lane.work.put((kind, live, preps))
+                lane.work.put(("batch", kind, live, preps))
 
     # ---- lane threads: the device half of the pipeline -------------------
 
@@ -341,9 +391,15 @@ class AsyncSolverEngine:
             item = lane.work.get()
             if item is _SENTINEL:
                 return
-            kind, reqs, preps = item
+            tag, kind, reqs, extra = item
             try:
-                self._solve_batch(lane, kind, reqs, preps)
+                if tag == "refill":
+                    # extra = bucket shape; reqs GROWS in place as the
+                    # session admits, so the fallback below covers every
+                    # request the session ever owned
+                    self._solve_refill(lane, kind, reqs, extra)
+                else:
+                    self._solve_batch(lane, kind, reqs, extra)
             except Exception:
                 try:
                     self._isolate_failures(lane, kind, reqs)
@@ -376,6 +432,84 @@ class AsyncSolverEngine:
             # read snapshot() the instant the future resolves
             self.metrics.record_done((now - r.submit_t) * 1e3)
             r.future.set_result(results[i])
+
+    def _refill_rt(self, kind: str):
+        """The kind's refill runtime, or ``None`` if it serves closed-batch
+        only (cached per kind — runtimes are stateless)."""
+        if kind not in self._refill_rts:
+            try:
+                self._refill_rts[kind] = refill_runtime(
+                    kind, **self._solver_kw.get(kind, {}))
+            except ValueError:
+                self._refill_rts[kind] = None
+        return self._refill_rts[kind]
+
+    def _pop_refill(self, kind: str, solver, n: int) -> list[_Request]:
+        """Pop up to ``n`` pending requests of ``kind`` that fit ``solver``'s
+        session bucket, preserving FIFO order of the rest."""
+        with self._cond:
+            q = self._pending.get(kind)
+            if not q:
+                return []
+            taken: list[_Request] = []
+            keep: list[_Request] = []
+            for r in q:
+                if len(taken) < n and solver.fits(r.payload):
+                    taken.append(r)
+                else:
+                    keep.append(r)
+            if taken:
+                q.clear()
+                q.extend(keep)
+            return taken
+
+    def _solve_refill(self, lane: _Lane, kind: str, reqs: list[_Request],
+                      bshape: tuple) -> None:
+        """One continuous-batching session on ``lane`` (``refill=True``).
+
+        ``reqs`` seed the session; at every cycle boundary the session's
+        ``admit`` callback pops fitting pending requests of the same kind
+        (appending them to ``reqs`` — the list index IS the session request
+        index), and each future resolves through ``on_result`` the moment
+        its instance converges.  Capacity is ``max_batch`` rounded up to a
+        multiple of the lane's shard count so the slot array splits evenly
+        across its sub-mesh.  If the session itself aborts, the lane loop's
+        poison-isolation fallback re-solves every unresolved request solo.
+        """
+        mesh = lane.engine.mesh
+        sc = 1 if mesh is None else shard_count(mesh, lane.engine.mesh_axis)
+        cap = -(-self.max_batch // sc) * sc
+        solver = lane.engine.refill_session(kind, shape=bshape, capacity=cap)
+        self.metrics.record_refill_session(kind)
+
+        def admit_cb(n_free: int) -> list:
+            taken = self._pop_refill(kind, solver, n_free)
+            live = [r for r in taken
+                    if r.future.set_running_or_notify_cancel()]
+            self.metrics.record_cancelled(len(taken) - len(live))
+            if live:
+                self.metrics.record_refill_admit(kind, len(live))
+                reqs.extend(live)
+            return [r.payload for r in live]
+
+        def on_result(idx: int, res) -> None:
+            r = reqs[idx]
+            self.metrics.record_done((time.monotonic() - r.submit_t) * 1e3)
+            r.future.set_result(res)
+
+        def on_error(idx: int, e: Exception) -> None:
+            r = reqs[idx]
+            self.metrics.record_done(0.0, ok=False)
+            r.future.set_exception(e)
+
+        def trace(cycle: int, n_live: int) -> None:
+            self.metrics.record_live_trace(cycle, n_live)
+            self.metrics.record_refill_cycle(kind, n_live / cap)
+
+        seeds = [r.payload for r in list(reqs)]
+        with trace_cycles(trace):
+            solver.run(seeds, admit=admit_cb, on_result=on_result,
+                       on_error=on_error)
 
     def _isolate_failures(self, lane: _Lane, kind: str,
                           reqs: list[_Request]) -> None:

@@ -10,7 +10,9 @@ What's under test (repro.serve.engine):
   and mixed kinds, and every flush returns exactly its round's tickets;
 * partial-failure delivery: if one kind's batch raises, kinds that
   already completed are NOT re-solved on retry — their results are
-  delivered by the next flush and only the failing kind stays queued.
+  delivered by the next flush and only the failing kind stays queued;
+* a submit landing WHILE a flush is solving is never dropped (it stays
+  queued for the next round), and flush results iterate in ticket order.
 """
 import jax.numpy as jnp
 import numpy as np
@@ -152,6 +154,51 @@ def test_completed_kind_delivers_when_other_kind_fails(monkeypatch):
     # both tickets delivered; the max-flow batch was NOT re-solved
     assert sorted(out) == [tf, ta] and len(maxflow_calls) == 1
     assert bool(out[tf].converged) and bool(out[ta].converged)
+
+
+def test_submit_during_flush_is_never_dropped(monkeypatch):
+    """Regression: ``flush`` used to snapshot the queue and then
+    ``clear()`` it — a submit landing WHILE the batch solved (from a
+    callback or another thread) was silently discarded.  Now a mid-flush
+    submit stays queued for the next flush, and each flush returns a
+    ticket-ordered dict of exactly its own round."""
+    rng = np.random.default_rng(6)
+    engine = SolverEngine()
+    late: list[int] = []
+
+    real = get_kind("maxflow")
+
+    def submitting_solve(prep, **kw):
+        if not late:                     # re-entrant submit, mid-flush
+            late.append(engine.submit("maxflow", _prob(rng)))
+        return real.solve_prepared(prep, **kw)
+
+    monkeypatch.setitem(kinds_mod._REGISTRY, "maxflow",
+                        real._replace(solve_prepared=submitting_solve))
+
+    t0 = engine.submit("maxflow", _prob(rng))
+    out = engine.flush()
+    # this round delivered only its own ticket...
+    assert sorted(out) == [t0]
+    # ...and the mid-flush submission survived for the next round
+    assert engine.pending() == 1
+    out2 = engine.flush()
+    assert sorted(out2) == late
+    assert bool(out2[late[0]].converged)
+
+
+def test_flush_returns_ticket_ordered_dict():
+    """Iteration order of a flush result is global ticket order even when
+    kinds were submitted interleaved (kinds solve grouped, not in ticket
+    order)."""
+    rng = np.random.default_rng(7)
+    engine = SolverEngine()
+    tickets = [engine.submit("maxflow", _prob(rng)),
+               engine.submit("assignment", rng.integers(0, 9, (4, 4))),
+               engine.submit("maxflow", _prob(rng)),
+               engine.submit("matching", rng.random((4, 5)) < 0.5)]
+    out = engine.flush()
+    assert list(out) == sorted(tickets)
 
 
 def test_flush_stats_out_reports_buckets():
