@@ -52,10 +52,64 @@ def bench_maxflow(rows, repeats=2):
                            jnp.asarray(ct))
         res = maxflow_grid(prob)
         us = _time(maxflow_grid, prob, reps=repeats)
-        rows.append((f"maxflow_grid_{hw}x{hw}", us,
-                     f"flow={float(res.flow):.0f};rounds={int(res.rounds)};"
+        rows.append((f"maxflow_grid_{hw}x{hw}", us, int(res.rounds),
+                     f"flow={float(res.flow):.0f};"
+                     f"heuristics={int(res.heuristics)};"
                      f"Mnode_rounds_per_s="
                      f"{hw*hw*int(res.rounds)/us:.1f}"))
+
+
+@bench("adversarial")
+def bench_adversarial(rows, repeats=2, sizes=None):
+    """Workload-balanced backend vs the paper-faithful round on adversarial
+    instance families (benchmarks/RESULTS_adversarial.md).
+
+    Three generators from ``repro.core.maxflow.ref`` stress what
+    ``backend="balanced"`` changes: ``long_path`` (stranded excess must
+    travel home — the bidirectional relabel's win), ``checkerboard``
+    (height-plateau oscillation — the stall trigger's win), and
+    ``random_wide`` (ragged wide frontier — the active-tile schedule's
+    win). Every solve is oracle-checked against scipy before timing, and
+    the headline metric is the ROUNDS ratio (machine-independent; the CPU
+    runner times the pallas path in interpret mode, so wall-clock favours
+    xla here regardless of algorithmic merit — see RESULTS_adversarial.md).
+
+    ``sizes`` defaults to (64, 256); the CI smoke step narrows it via
+    ``BENCH_ADVERSARIAL_SIZES`` (comma-separated) to stay inside its time
+    budget.
+    """
+    import os
+
+    from repro.core.maxflow.grid import GridProblem, maxflow_grid
+    from repro.core.maxflow.ref import (ADVERSARIAL_GENERATORS,
+                                        maxflow_grid_ref)
+    if sizes is None:
+        env = os.environ.get("BENCH_ADVERSARIAL_SIZES", "")
+        sizes = tuple(int(s) for s in env.split(",") if s) or (64, 256)
+    rng = np.random.default_rng(0)
+    for gname, gen in ADVERSARIAL_GENERATORS.items():
+        for hw in sizes:
+            cap, cs, ct = gen(rng, hw, hw)
+            want = maxflow_grid_ref(cap, cs, ct)
+            prob = GridProblem(jnp.asarray(cap), jnp.asarray(cs),
+                               jnp.asarray(ct))
+            meas = {}
+            for be in ("xla", "balanced"):
+                res = maxflow_grid(prob, backend=be, max_rounds=500_000)
+                assert bool(res.converged), (gname, hw, be)
+                assert float(res.flow) == float(want), (gname, hw, be)
+                us = _time(maxflow_grid, prob, backend=be,
+                           max_rounds=500_000, reps=repeats)
+                meas[be] = (us, int(res.rounds))
+                rows.append((f"adversarial_{gname}_{hw}x{hw}_{be}", us,
+                             int(res.rounds),
+                             f"flow={float(res.flow):.0f};"
+                             f"heuristics={int(res.heuristics)}"))
+            (us_x, r_x), (us_b, r_b) = meas["xla"], meas["balanced"]
+            rows.append((f"adversarial_{gname}_{hw}x{hw}_gain", us_x - us_b,
+                         None,
+                         f"rounds_ratio={r_x / max(r_b, 1):.2f}x;"
+                         f"speedup_vs_xla={us_x / us_b:.2f}x"))
 
 
 @bench("batched")
@@ -413,9 +467,8 @@ def bench_assignment(rows, repeats=2):
             note = ""
             if n == 30:
                 note = f";paper_50000us_speedup={50_000/us:.1f}x"
-            rows.append((f"assignment_{method}_n{n}", us,
-                         f"ops={int(res.pushes)+int(res.relabels)};"
-                         f"rounds={int(res.rounds)}" + note))
+            rows.append((f"assignment_{method}_n{n}", us, int(res.rounds),
+                         f"ops={int(res.pushes)+int(res.relabels)}" + note))
 
 
 @bench("matching", kind="matching")
@@ -437,9 +490,8 @@ def bench_matching(rows, repeats=2):
         hk_card = hopcroft_karp(np.asarray(adj))[2]
         hk_us = (time.perf_counter() - t0) * 1e6
         assert int(res.cardinality) == int(hk_card)
-        rows.append((f"matching_{n}x{n}", us,
-                     f"card={int(res.cardinality)};"
-                     f"rounds={int(res.rounds)};hk_host_us={hk_us:.0f}"))
+        rows.append((f"matching_{n}x{n}", us, int(res.rounds),
+                     f"card={int(res.cardinality)};hk_host_us={hk_us:.0f}"))
     B, n = 32, 64
     adjs = jnp.asarray(np.stack(
         [random_bipartite(rng, n, n, p=6.0 / n) for _ in range(B)]))

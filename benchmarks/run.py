@@ -1,8 +1,12 @@
 """Benchmark harness: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV (plus a trailing roofline pointer:
-the dry-run roofline table lives in EXPERIMENTS.md and
-results/dryrun_*.json).
+Prints ``name,us_per_call,rounds,derived`` CSV (plus a trailing roofline
+pointer: the dry-run roofline table lives in EXPERIMENTS.md and
+results/dryrun_*.json). ``rounds`` is the solver's per-instance round
+count — the machine-independent cost measure (wall-clock on the CPU CI
+runner says little about TPU behaviour; round counts transfer). Benches
+append either ``(name, us, rounds, derived)`` or the legacy 3-tuple
+``(name, us, derived)`` (rounds column left empty).
 
 Usage::
 
@@ -63,8 +67,15 @@ def main(argv: list[str] | None = None) -> None:
         if args.bench and args.bench != name:
             continue
         fn(rows, repeats=args.repeats)
-    lines = ["name,us_per_call,derived"]
-    lines += [f"{name},{us:.1f},{derived}" for name, us, derived in rows]
+    lines = ["name,us_per_call,rounds,derived"]
+    for row in rows:
+        if len(row) == 4:
+            name, us, rounds, derived = row
+            r = "" if rounds is None else str(int(rounds))
+        else:
+            name, us, derived = row
+            r = ""
+        lines.append(f"{name},{us:.1f},{r},{derived}")
     print("\n".join(lines))
     if args.csv is not None:
         args.csv.parent.mkdir(parents=True, exist_ok=True)

@@ -133,6 +133,13 @@ class BucketStats(NamedTuple):
     ~0 when the whole bucket converges together (masked dispatch is
     optimal), toward 1 when stragglers dominate (early-exit compaction
     pays — see benchmarks/RESULTS_compaction.md).
+
+    ``heur_min``/``heur_max``/``heur_mean`` summarize per-instance
+    heuristic (global-relabel) invocations for kinds that report them
+    (``"maxflow"``); ``None`` for kinds that don't. Under
+    ``backend="balanced"`` the relabel cadence is stall-driven, so this is
+    the knob-tuning signal: heur_mean ≈ rounds_mean / rounds_per_heuristic
+    means the stall trigger degenerated to the fixed cadence.
     """
 
     kind: str
@@ -144,6 +151,9 @@ class BucketStats(NamedTuple):
     rounds_max: int
     rounds_mean: float
     n_converged: int
+    heur_min: int | None = None
+    heur_max: int | None = None
+    heur_mean: float | None = None
 
     @property
     def spread(self) -> float:
@@ -151,14 +161,19 @@ class BucketStats(NamedTuple):
 
 
 def _stats(kind: str, prep: PreparedBucket, rounds, converged,
-           compact: bool) -> BucketStats:
+           compact: bool, heuristics=None) -> BucketStats:
     r = np.asarray(rounds)[:len(prep.idxs)]          # real instances only
     c = np.asarray(converged)[:len(prep.idxs)]
+    heur: dict = {}
+    if heuristics is not None:
+        hh = np.asarray(heuristics)[:len(prep.idxs)]
+        heur = dict(heur_min=int(hh.min()), heur_max=int(hh.max()),
+                    heur_mean=float(hh.mean()))
     return BucketStats(
         kind=kind, shape=prep.shape, n_real=len(prep.idxs),
         n_pad=prep.n_pad, compact=compact,
         rounds_min=int(r.min()), rounds_max=int(r.max()),
-        rounds_mean=float(r.mean()), n_converged=int(c.sum()))
+        rounds_mean=float(r.mean()), n_converged=int(c.sum()), **heur)
 
 
 def _make_buckets(kind: str, shapes: Sequence[tuple], *, bucket: str,
@@ -403,11 +418,14 @@ def solve_prepared_maxflow(
                 cap=st.cap[b, :, :h, :w],
                 cap_src=st.cap_src[b, :h, :w],
                 cap_sink=st.cap_sink[b, :h, :w],
-                sink_flow=st.sink_flow[b], src_flow=st.src_flow[b]),
+                sink_flow=st.sink_flow[b], src_flow=st.src_flow[b],
+                heur=None if st.heur is None else st.heur[b]),
             rounds=res.rounds[b],
             converged=res.converged[b],
+            heuristics=None if res.heuristics is None else res.heuristics[b],
         )
-    return out, _stats("maxflow", prep, res.rounds, res.converged, compact)
+    return out, _stats("maxflow", prep, res.rounds, res.converged, compact,
+                       heuristics=res.heuristics)
 
 
 def solve_maxflow_batch(
@@ -580,17 +598,18 @@ def _maxflow_inert(shape: tuple) -> GridProblem:
 
 def _maxflow_loop_spec(*, rounds_per_heuristic: int = 32,
                        max_rounds: int = 100_000, bfs_max_iters: int = 0,
-                       backend: str = "xla"):
+                       backend: str = "xla", stall_threshold: float = 0.05):
     """The grid solver's cached ``LoopSpec`` factory (``maxflow_grid``
     defaults); see ``repro.core.maxflow.grid``."""
     from repro.core.maxflow.grid import _grid_spec
     return _grid_spec(rounds_per_heuristic, max_rounds, bfs_max_iters,
-                      backend)
+                      backend, stall_threshold)
 
 
 def _maxflow_refill(*, rounds_per_heuristic: int = 32,
                     max_rounds: int = 100_000, bfs_max_iters: int = 0,
-                    backend: str = "xla") -> RefillRuntime:
+                    backend: str = "xla",
+                    stall_threshold: float = 0.05) -> RefillRuntime:
     """The ``"maxflow"`` kind's continuous-batching runtime
     (``repro.core.refill``): the same cached spec / jitted init+finalize
     the compacted batch driver uses, so a refilled instance's trajectory
@@ -600,7 +619,7 @@ def _maxflow_refill(*, rounds_per_heuristic: int = 32,
     from repro.core.maxflow.grid import (_grid_finalize_jit, _grid_init_jit,
                                          _grid_spec)
     spec = _grid_spec(rounds_per_heuristic, max_rounds, bfs_max_iters,
-                      backend)
+                      backend, stall_threshold)
 
     def pad_one(problem: GridProblem, shape) -> GridProblem:
         H, W = shape
@@ -627,8 +646,10 @@ def _maxflow_refill(*, rounds_per_heuristic: int = 32,
                 e=st.e[0, :h, :w], h=st.h[0, :h, :w],
                 cap=st.cap[0, :, :h, :w], cap_src=st.cap_src[0, :h, :w],
                 cap_sink=st.cap_sink[0, :h, :w],
-                sink_flow=st.sink_flow[0], src_flow=st.src_flow[0]),
-            rounds=res.rounds[0], converged=res.converged[0])
+                sink_flow=st.sink_flow[0], src_flow=st.src_flow[0],
+                heur=None if st.heur is None else st.heur[0]),
+            rounds=res.rounds[0], converged=res.converged[0],
+            heuristics=None if res.heuristics is None else res.heuristics[0])
 
     def shape_of(problem: GridProblem) -> tuple:
         return tuple(np.asarray(jnp.asarray(problem.cap_src)).shape)

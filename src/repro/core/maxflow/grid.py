@@ -64,6 +64,11 @@ class GridFlowState(NamedTuple):
     cap_sink: jax.Array   # (..., H, W) residual x -> t
     sink_flow: jax.Array  # (...,) total flow delivered to the sink
     src_flow: jax.Array   # (...,) total flow returned to the source
+    # (...,) int32 count of global-relabel (heuristic) invocations per
+    # instance, excluding the round-0 init BFS. None = untracked (states
+    # built by hand, e.g. kernel unit tests); solver-built states always
+    # carry it. None is an empty pytree subtree, so both forms jit.
+    heur: jax.Array | None = None
 
 
 class GridFlowResult(NamedTuple):
@@ -72,6 +77,9 @@ class GridFlowResult(NamedTuple):
     state: GridFlowState   # NOTE: maxflow_grid_batch returns cap (B, 4, H, W)
     rounds: jax.Array      # (...,) Jacobi rounds executed per instance
     converged: jax.Array   # (...,) bool
+    # (...,) heuristic invocations (see GridFlowState.heur); None when the
+    # state was solved by a pre-observability caller.
+    heuristics: jax.Array | None = None
 
 
 def _nbr_h(h: jax.Array, d: int) -> jax.Array:
@@ -117,7 +125,7 @@ def jacobi_round(state: GridFlowState, n_nodes: jax.Array) -> GridFlowState:
     with ``cap`` ``(4, ..., H, W)``; a converged instance (no active node) is
     an exact no-op, which is what makes the batched solver sound.
     """
-    e, h, cap, cap_src, cap_sink, sink_flow, src_flow = state
+    e, h, cap, cap_src, cap_sink, sink_flow, src_flow = state[:7]
     active = e > 0
 
     # Candidate heights: [sink, source, UP, DOWN, LEFT, RIGHT]; INF if the
@@ -155,7 +163,7 @@ def jacobi_round(state: GridFlowState, n_nodes: jax.Array) -> GridFlowState:
     cap_new = jnp.stack(
         [cap[d] - d_nbr[d] + _move(d_nbr[_OPP[d]], _OPP[d]) for d in range(4)], 0
     )
-    return GridFlowState(
+    return state._replace(
         e=e_new,
         h=h_new,
         cap=cap_new,
@@ -176,7 +184,7 @@ def jacobi_round_multipush(state: GridFlowState,
     per-round cost on the VPU (every push is still admissible under Hong's
     relaxed rule against pre-round heights, so correctness is inherited).
     """
-    e, h, cap, cap_src, cap_sink, sink_flow, src_flow = state
+    e, h, cap, cap_src, cap_sink, sink_flow, src_flow = state[:7]
     active = e > 0
 
     cand_h = [jnp.where(cap_sink > 0, 0, INF_H),
@@ -207,7 +215,7 @@ def jacobi_round_multipush(state: GridFlowState,
     cap_new = jnp.stack(
         [cap[d] - d_nbr[d] + _move(d_nbr[_OPP[d]], _OPP[d]) for d in range(4)],
         0)
-    return GridFlowState(
+    return state._replace(
         e=e - out + inflow, h=h_new, cap=cap_new,
         cap_src=cap_src - d_src, cap_sink=cap_sink - d_sink,
         sink_flow=sink_flow + _gsum(d_sink),
@@ -267,19 +275,35 @@ def check_no_violations(state: GridFlowState) -> jax.Array:
     return ok
 
 
+VALID_BACKENDS = ("xla", "multipush", "pallas", "balanced")
+
+
 def _round_fn(backend: str):
-    """Jacobi-round implementation for a backend flag (xla/multipush/pallas)."""
+    """Jacobi-round implementation for a backend flag.
+
+    Unknown strings raise (a typo'd backend silently solving with the
+    default XLA round is a perf bug that looks like a perf result).
+    """
     if backend == "pallas":  # the paper-optimized hot loop as a TPU kernel
         from repro.kernels.grid_push.ops import jacobi_round_pallas
         return jacobi_round_pallas
     if backend == "multipush":  # beyond-paper: saturate all lower nbrs
         return jacobi_round_multipush
-    return jacobi_round
+    if backend == "balanced":  # active-tile scheduled kernel (drop the
+        from repro.kernels.grid_push.ops import \
+            jacobi_round_scheduled      # pushed-flow stall signal here)
+        return lambda s, n: jacobi_round_scheduled(s, n)[0]
+    if backend == "xla":
+        return jacobi_round
+    raise ValueError(
+        f"unknown maxflow backend {backend!r}; valid backends: "
+        f"{', '.join(VALID_BACKENDS)}")
 
 
 @functools.lru_cache(maxsize=None)
 def _grid_spec(rounds_per_heuristic: int, max_rounds: int,
-               bfs_max_iters: int, backend: str) -> LoopSpec:
+               bfs_max_iters: int, backend: str,
+               stall_threshold: float = 0.05) -> LoopSpec:
     """The grid solver's registration with the solver-loop runtime.
 
     Cached per static-knob tuple so repeated solves hand the runtime the
@@ -287,20 +311,70 @@ def _grid_spec(rounds_per_heuristic: int, max_rounds: int,
     The cycle is shape-polymorphic: ``n_nodes`` and the BFS cap derive from
     the state's trailing (H, W), so one spec serves every grid size and
     every compaction sub-batch size.
+
+    Every backend's cycle is exactly ``rounds_per_heuristic`` rounds (the
+    runtime's rounds accounting assumes it). The fixed-cadence backends end
+    the cycle with an unconditional global relabel; ``"balanced"`` ends it
+    with a STALL-DRIVEN one — a per-instance EWMA of terminal-retired flow
+    per unit remaining excess decides which instances re-run the (bidirectional)
+    relabel pass, and ``lax.cond`` skips its cost entirely when no instance
+    stalled. The trigger and the relabel are pure per-instance functions of
+    per-instance state, so the batched == loop-of-singles bit-match
+    contract survives (tests/test_balanced.py).
     """
     round_fn = _round_fn(backend)
+    if backend == "balanced":
+        from repro.kernels.bfs_relabel.ops import bfs_relabel_heights
+        from repro.kernels.grid_push.ops import jacobi_round_scheduled
+
+    def _count_heur(new: GridFlowState, invoked) -> GridFlowState:
+        if new.heur is None:
+            return new
+        return new._replace(heur=new.heur + invoked.astype(jnp.int32))
 
     def cycle(state: GridFlowState) -> GridFlowState:
         H, W = state.e.shape[-2:]
         n_nodes = jnp.int32(H * W + 2)
         iters = bfs_max_iters or (H * W + 2)
 
+        if backend == "balanced":
+            batch = state.e.shape[:-2]
+
+            def inner(_, carry):
+                s, ewma = carry
+                remaining = jnp.maximum(_gsum(s.e), 1.0)
+                s, retired = jacobi_round_scheduled(s, n_nodes)
+                # EWMA of per-round progress: excess RETIRED at a terminal
+                # this round as a fraction of the excess still in flight
+                # (inter-node moves don't count — height-plateau ping-pong
+                # must read as a stall, not progress). Alpha 1/2 ≈ a
+                # two-round memory — long enough to ride out single slack
+                # rounds, short enough to catch a stall within a cycle.
+                ewma = 0.5 * ewma + 0.5 * (retired / remaining)
+                return s, ewma
+
+            new, ewma = jax.lax.fori_loop(
+                0, rounds_per_heuristic, inner,
+                (state, jnp.ones(batch, jnp.float32)))
+            stalled = (jnp.any(new.e > 0, axis=(-2, -1))
+                       & (ewma < stall_threshold))
+
+            def relabel(s: GridFlowState) -> jax.Array:
+                h_bfs = bfs_relabel_heights(s.cap, s.cap_src, s.cap_sink,
+                                            s.h, n_nodes, iters)
+                return jnp.where(stalled[..., None, None], h_bfs, s.h)
+
+            h_new = jax.lax.cond(jnp.any(stalled), relabel,
+                                 lambda s: s.h, new)
+            return _count_heur(new._replace(h=h_new), stalled)
+
         def inner(_, s):
             return round_fn(s, n_nodes)
 
         new = jax.lax.fori_loop(0, rounds_per_heuristic, inner, state)
-        return new._replace(
+        new = new._replace(
             h=bfs_heights(new.cap, new.cap_sink, new.h, n_nodes, iters))
+        return _count_heur(new, jnp.ones(state.e.shape[:-2], jnp.bool_))
 
     def live(state: GridFlowState, rounds: jax.Array) -> jax.Array:
         return jnp.any(state.e > 0, axis=(-2, -1)) & (rounds < max_rounds)
@@ -333,6 +407,7 @@ def _grid_init(cap0, cs0, ct0, *, bfs_max_iters: int) -> GridFlowState:
         cap_sink=ct0.astype(jnp.float32),
         sink_flow=jnp.zeros(bshape, jnp.float32),
         src_flow=jnp.zeros(bshape, jnp.float32),
+        heur=jnp.zeros(bshape, jnp.int32),  # init BFS below not counted
     )
     # Start from BFS-consistent heights (global relabel at round 0).
     return state._replace(
@@ -355,11 +430,13 @@ def _grid_finalize(state: GridFlowState, rounds, *,
         state=state,
         rounds=rounds,
         converged=~jnp.any(state.e > 0, axis=(-2, -1)),
+        heuristics=state.heur,
     )
 
 
 def _solve_grid(cap0, cs0, ct0, *, rounds_per_heuristic, max_rounds,
-                bfs_max_iters, backend) -> GridFlowResult:
+                bfs_max_iters, backend,
+                stall_threshold=0.05) -> GridFlowResult:
     """Shared masked solver loop, rank-polymorphic over leading batch axes.
 
     ``cs0``/``ct0`` are ``(..., H, W)`` with ``cap0`` ``(4, ..., H, W)``.
@@ -372,7 +449,7 @@ def _solve_grid(cap0, cs0, ct0, *, rounds_per_heuristic, max_rounds,
     """
     state = _grid_init(cap0, cs0, ct0, bfs_max_iters=bfs_max_iters)
     spec = _grid_spec(rounds_per_heuristic, max_rounds, bfs_max_iters,
-                      backend)
+                      backend, stall_threshold)
     state, rounds = run_masked(spec, state, cs0.shape[:-2])
     return _grid_finalize(state, rounds, bfs_max_iters=bfs_max_iters)
 
@@ -383,7 +460,8 @@ _grid_finalize_jit = jax.jit(_grid_finalize,
 
 
 def _grid_batch_compact(cap0, cs0, ct0, *, rounds_per_heuristic, max_rounds,
-                        bfs_max_iters, backend, lanes=None) -> GridFlowResult:
+                        bfs_max_iters, backend, stall_threshold=0.05,
+                        lanes=None) -> GridFlowResult:
     """Batched solve with early-exit compaction (public (B, ...) layout).
 
     ``run_compacted`` drives the host loop: still-live instances are
@@ -396,7 +474,7 @@ def _grid_batch_compact(cap0, cs0, ct0, *, rounds_per_heuristic, max_rounds,
                            jnp.asarray(cs0), jnp.asarray(ct0),
                            bfs_max_iters=bfs_max_iters)
     spec = _grid_spec(rounds_per_heuristic, max_rounds, bfs_max_iters,
-                      backend)
+                      backend, stall_threshold)
     state, rounds = run_compacted(spec, state, cs0.shape[0], lanes=lanes)
     res = _grid_finalize_jit(state, rounds, bfs_max_iters=bfs_max_iters)
     # public layout: batch axis leads everywhere, including state.cap
@@ -407,7 +485,7 @@ def _grid_batch_compact(cap0, cs0, ct0, *, rounds_per_heuristic, max_rounds,
 @functools.partial(
     jax.jit,
     static_argnames=("rounds_per_heuristic", "max_rounds", "bfs_max_iters",
-                     "backend"),
+                     "backend", "stall_threshold"),
 )
 def maxflow_grid(
     problem: GridProblem,
@@ -416,6 +494,7 @@ def maxflow_grid(
     max_rounds: int = 100_000,
     bfs_max_iters: int = 0,
     backend: str = "xla",
+    stall_threshold: float = 0.05,
 ) -> GridFlowResult:
     """Max-flow / min-cut of ONE grid-cut instance (paper §4 on TPU).
 
@@ -432,13 +511,21 @@ def maxflow_grid(
         ``flow``/``cut`` describe the partial state.
       bfs_max_iters: BFS wavefront cap (0 = the H*W+2 upper bound).
       backend: ``"xla"`` (paper-faithful Jacobi round), ``"multipush"``
-        (beyond-paper: saturate every lower neighbour per round), or
-        ``"pallas"`` (the round's decision stage as a TPU kernel).
+        (beyond-paper: saturate every lower neighbour per round),
+        ``"pallas"`` (the round's decision stage as a TPU kernel), or
+        ``"balanced"`` (workload-balanced: active-tile-scheduled kernel
+        dispatch, bidirectional BFS relabel kernel, stall-driven heuristic
+        cadence — see docs/kernels.md). Unknown strings raise ValueError.
+      stall_threshold: ``"balanced"`` only — the relabel pass runs when the
+        EWMA of terminal-retired flow per unit remaining excess drops below
+        this (0 = never relabel after init; the solver still terminates via
+        +1 relabels).
 
     Returns:
       ``GridFlowResult``: scalar ``flow`` (== min-cut value when
       ``converged``), ``cut (H, W)`` bool (True = sink side of a minimum
-      cut), the final ``GridFlowState``, scalar ``rounds`` and ``converged``.
+      cut), the final ``GridFlowState``, scalar ``rounds`` and
+      ``converged``, plus ``heuristics`` (global-relabel invocations).
 
     Convergence contract: ``converged`` is True iff no node holds positive
     excess, at which point ``flow`` is the exact max-flow value (the solver
@@ -455,21 +542,22 @@ def maxflow_grid(
     return _solve_grid(cap0, cs0, ct0,
                        rounds_per_heuristic=rounds_per_heuristic,
                        max_rounds=max_rounds, bfs_max_iters=bfs_max_iters,
-                       backend=backend)
+                       backend=backend, stall_threshold=stall_threshold)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("rounds_per_heuristic", "max_rounds", "bfs_max_iters",
-                     "backend"),
+                     "backend", "stall_threshold"),
 )
 def _grid_batch_impl(cap0, cs0, ct0, *, rounds_per_heuristic, max_rounds,
-                     bfs_max_iters, backend) -> GridFlowResult:
+                     bfs_max_iters, backend,
+                     stall_threshold=0.05) -> GridFlowResult:
     """Batched solve in the public (B, ...) layout (shard_map-able body)."""
     res = _solve_grid(jnp.moveaxis(cap0, 1, 0), cs0, ct0,
                       rounds_per_heuristic=rounds_per_heuristic,
                       max_rounds=max_rounds, bfs_max_iters=bfs_max_iters,
-                      backend=backend)
+                      backend=backend, stall_threshold=stall_threshold)
     # public layout: batch axis leads everywhere, including state.cap
     return res._replace(
         state=res.state._replace(cap=jnp.moveaxis(res.state.cap, 0, 1)))
@@ -482,6 +570,7 @@ def maxflow_grid_batch(
     max_rounds: int = 100_000,
     bfs_max_iters: int = 0,
     backend: str = "xla",
+    stall_threshold: float = 0.05,
     compact: bool = False,
     mesh=None,
     mesh_axis: str | None = None,
@@ -492,8 +581,8 @@ def maxflow_grid_batch(
       problem: ``GridProblem`` with a leading batch axis — ``cap_nbr``
         ``(B, 4, H, W)`` (a plain stack of single-instance problems),
         ``cap_src``/``cap_sink`` ``(B, H, W)``.
-      rounds_per_heuristic / max_rounds / bfs_max_iters / backend: as in
-        ``maxflow_grid`` (applied per instance).
+      rounds_per_heuristic / max_rounds / bfs_max_iters / backend /
+        stall_threshold: as in ``maxflow_grid`` (applied per instance).
       compact: early-exit compaction (``repro.core.solver_loop``). Instead
         of one jitted dispatch whose converged instances are select-masked
         until the whole batch drains, a host-driven loop gathers still-live
@@ -536,7 +625,7 @@ def maxflow_grid_batch(
             f"{cap0.shape}; use maxflow_grid for a single instance")
     kw = dict(rounds_per_heuristic=rounds_per_heuristic,
               max_rounds=max_rounds, bfs_max_iters=bfs_max_iters,
-              backend=backend)
+              backend=backend, stall_threshold=stall_threshold)
     if compact:
         lanes = None
         if mesh is not None:

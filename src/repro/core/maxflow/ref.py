@@ -24,6 +24,123 @@ def random_grid_problem(rng: np.random.Generator, H: int, W: int,
     return cap, cs, ct
 
 
+def long_path_problem(H: int, W: int, path_len: int = 0):
+    """Adversarial: serpentine corridors that strand excess all along them.
+
+    Each corridor is a boustrophedon path of ``path_len`` cells (default
+    ``min(2·W, 128)``): the source feeds its head, only its tail reaches
+    the sink, and the corridor edge out of cell k has capacity ``L-1-k``
+    — strictly decreasing, so EVERY interior cell strands one unit of
+    excess (max-flow is 1 per corridor). All that stranded flow must
+    travel back to the source through the corridor's reverse residual
+    arcs. The paper's flat gap-to-N relabel gives the return journey no
+    gradient — stranded cells sit on a height plateau and creep home via
+    +1 relabels and tie-broken pushes. The balanced backend's
+    bidirectional relabel hands every cell its exact
+    ``N + dist_to_source`` height in one pass, so all units march home
+    simultaneously. Worst known family for ``backend="xla"`` rounds.
+
+    Corridor LENGTH is the pathology scale and is held fixed as the grid
+    grows (both backends pay the 2·L information-theoretic floor — flow
+    must march out and stranded units must march home — so scaling L
+    with the grid only dilutes the fixed-cadence overhead the family
+    exists to expose). What scales with the grid instead is the corridor
+    COUNT (one per 64-row band): larger instances have MORE thin active
+    fronts in an ever-emptier grid, which is exactly the workload
+    imbalance the active-tile schedule exploits.
+    """
+    if path_len <= 0:
+        path_len = min(2 * W, 128)
+    n_paths = max(1, H // 64)
+    band = H // n_paths
+    cap_nbr = np.zeros((4, H, W), np.float32)
+    cs = np.zeros((H, W), np.float32)
+    ct = np.zeros((H, W), np.float32)
+
+    wc = min(W, 64)             # corridor column span: switchback geometry
+    for m in range(n_paths):    # must not straighten out on wide grids
+        r0 = m * band
+        # boustrophedon walk within the band: left->right, right->left, ...
+        cells = []
+        for i in range(r0, min(r0 + band, H)):
+            js = range(wc) if (i - r0) % 2 == 0 else range(wc - 1, -1, -1)
+            cells.extend((i, j) for j in js)
+        path = cells[:min(path_len, len(cells))]
+        L = len(path)
+        for k, ((i, j), (ii, jj)) in enumerate(zip(path, path[1:])):
+            c = L - 1 - k
+            if ii == i + 1:
+                cap_nbr[DOWN, i, j] = c
+                cap_nbr[UP, ii, jj] = c
+            elif jj == j + 1:
+                cap_nbr[RIGHT, i, j] = c
+                cap_nbr[LEFT, ii, jj] = c
+            else:
+                cap_nbr[LEFT, i, j] = c
+                cap_nbr[RIGHT, ii, jj] = c
+        cs[path[0]] = L - 1 if L > 1 else 1
+        ct[path[-1]] = 1        # the bottleneck: max-flow == 1 per corridor
+    return cap_nbr, cs, ct
+
+
+def checkerboard_problem(H: int, W: int, hi: int = 16, lo: int = 1):
+    """Adversarial: alternating hi/lo capacity cells — a relabel stress.
+
+    Source arcs on the left column, sink arcs on the right; neighbour
+    capacities alternate ``hi``/``lo`` in a checkerboard, so flow
+    repeatedly over-commits into hi-cells whose exits are lo-edges.
+    Excess then oscillates on height plateaus until a relabel pass
+    re-grades the landscape — frequent stalls, which is exactly what the
+    balanced backend's stall trigger is for.
+    """
+    i, j = np.mgrid[0:H, 0:W]
+    board = np.where((i + j) % 2 == 0, float(hi), float(lo))
+    cap_nbr = np.zeros((4, H, W), np.float32)
+    for d in range(4):
+        cap_nbr[d] = board
+    cap_nbr[UP, 0, :] = 0
+    cap_nbr[DOWN, -1, :] = 0
+    cap_nbr[LEFT, :, 0] = 0
+    cap_nbr[RIGHT, :, -1] = 0
+    cs = np.zeros((H, W), np.float32)
+    ct = np.zeros((H, W), np.float32)
+    cs[:, 0] = hi
+    ct[:, -1] = lo
+    return cap_nbr, cs, ct
+
+
+def random_wide_problem(rng: np.random.Generator, H: int, W: int,
+                        max_cap: int = 64):
+    """Adversarial: heavy-tailed capacities, terminals on opposite edges.
+
+    Unlike ``random_grid_problem`` (dense terminal arcs everywhere — short
+    augmenting paths), all flow must cross the full grid width through
+    capacities spanning two orders of magnitude, so the active frontier
+    is wide and ragged: many rounds have most tiles idle, the active-tile
+    schedule's best case.
+    """
+    cap = np.exp(rng.uniform(0, np.log(max_cap + 1), size=(4, H, W)))
+    cap = np.floor(cap).astype(np.float32)
+    cap[UP, 0, :] = 0
+    cap[DOWN, -1, :] = 0
+    cap[LEFT, :, 0] = 0
+    cap[RIGHT, :, -1] = 0
+    cs = np.zeros((H, W), np.float32)
+    ct = np.zeros((H, W), np.float32)
+    cs[:, 0] = np.floor(
+        np.exp(rng.uniform(0, np.log(max_cap + 1), size=H))).astype(np.float32)
+    ct[:, -1] = np.floor(
+        np.exp(rng.uniform(0, np.log(max_cap + 1), size=H))).astype(np.float32)
+    return cap, cs, ct
+
+
+ADVERSARIAL_GENERATORS = {
+    "long_path": lambda rng, H, W: long_path_problem(H, W),
+    "checkerboard": lambda rng, H, W: checkerboard_problem(H, W),
+    "random_wide": random_wide_problem,
+}
+
+
 def maxflow_grid_ref(cap_nbr: np.ndarray, cap_src: np.ndarray,
                      cap_sink: np.ndarray) -> int:
     """Exact max-flow value via scipy's Dinic (integer capacities)."""

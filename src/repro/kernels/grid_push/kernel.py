@@ -23,27 +23,18 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 INF_H = 2 ** 30  # python int: jnp scalars would be captured consts in pallas
 
 
-def _grid_push_kernel(nnodes_ref, e_ref, h_ref, cap_ref, nbrh_ref, csrc_ref,
-                      csink_ref, hnew_ref, delta_ref):
-    # Blocks are (BH, BW) planes; in batched mode each carries a leading
-    # singleton batch axis (one grid step per instance) that we squeeze here.
-    bh, bw = e_ref.shape[-2:]
-    e = e_ref[...].reshape(bh, bw)            # f32
-    h = h_ref[...].reshape(bh, bw)            # i32
-    cap = cap_ref[...].reshape(4, bh, bw)     # f32 residual neighbour caps
-    nbr_h = nbrh_ref[...].reshape(4, bh, bw)  # i32 neighbour heights (halo)
-    cap_src = csrc_ref[...].reshape(bh, bw)   # f32
-    cap_sink = csink_ref[...].reshape(bh, bw)  # f32
-    n_nodes = nnodes_ref[0]
+def _decide(e, h, cap, nbr_h, cap_src, cap_sink, n_nodes):
+    """The per-node decision math shared by both kernels (concrete values).
 
+    Candidate order matches grid.jacobi_round:
+    [sink, source, UP, DOWN, LEFT, RIGHT].
+    """
     active = e > 0
-
-    # candidate heights, same order as grid.jacobi_round:
-    # [sink, source, UP, DOWN, LEFT, RIGHT]
     cand = jnp.concatenate([
         jnp.where(cap_sink > 0, 0, INF_H)[None],
         jnp.where(cap_src > 0, n_nodes, INF_H)[None],
@@ -60,9 +51,64 @@ def _grid_push_kernel(nnodes_ref, e_ref, h_ref, cap_ref, nbrh_ref, csrc_ref,
     delta = jnp.where(do_push, jnp.minimum(e, chosen_cap), 0.0)
 
     planes = jax.lax.broadcasted_iota(jnp.int32, cand.shape, 0)
-    hnew_ref[...] = jnp.where(do_relabel, h_min + 1, h).reshape(hnew_ref.shape)
-    delta_ref[...] = jnp.where(planes == choice[None], delta[None],
-                               0.0).reshape(delta_ref.shape)
+    h_new = jnp.where(do_relabel, h_min + 1, h)
+    return h_new, jnp.where(planes == choice[None], delta[None], 0.0)
+
+
+def _grid_push_kernel(nnodes_ref, e_ref, h_ref, cap_ref, nbrh_ref, csrc_ref,
+                      csink_ref, hnew_ref, delta_ref):
+    # Blocks are (BH, BW) planes; in batched mode each carries a leading
+    # singleton batch axis (one grid step per instance) that we squeeze here.
+    bh, bw = e_ref.shape[-2:]
+    e = e_ref[...].reshape(bh, bw)            # f32
+    h = h_ref[...].reshape(bh, bw)            # i32
+    cap = cap_ref[...].reshape(4, bh, bw)     # f32 residual neighbour caps
+    nbr_h = nbrh_ref[...].reshape(4, bh, bw)  # i32 neighbour heights (halo)
+    cap_src = csrc_ref[...].reshape(bh, bw)   # f32
+    cap_sink = csink_ref[...].reshape(bh, bw)  # f32
+    n_nodes = nnodes_ref[0]
+
+    h_new, delta = _decide(e, h, cap, nbr_h, cap_src, cap_sink, n_nodes)
+    hnew_ref[...] = h_new.reshape(hnew_ref.shape)
+    delta_ref[...] = delta.reshape(delta_ref.shape)
+
+
+def _grid_push_sched_kernel(sched_ref, nact_ref, nnodes_ref, e_ref, h_ref,
+                            cap_ref, nbrh_ref, csrc_ref, csink_ref,
+                            hnew_ref, delta_ref):
+    """Active-tile-scheduled decision step (workload-balanced backend).
+
+    Grid is ``(B, T)`` over SCHEDULE POSITIONS, not tile coordinates: the
+    scalar-prefetched ``sched[b]`` is a permutation of instance ``b``'s
+    tile ids with the active tiles compacted to the front, and this
+    program's blocks are tile ``sched[b, i]`` (index maps below). Schedule
+    positions past ``nact[b]`` carry tiles with NO active vertex — for
+    them one Jacobi round is the identity (no node pushes or relabels), so
+    the kernel skips the whole candidate/argmin/push stage and writes the
+    identity outputs directly. The permutation covers every tile exactly
+    once, so every output block is written exactly once.
+    """
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    bh, bw = e_ref.shape[-2:]
+
+    @pl.when(i < nact_ref[b])
+    def _active_tile():
+        e = e_ref[...].reshape(bh, bw)
+        h = h_ref[...].reshape(bh, bw)
+        cap = cap_ref[...].reshape(4, bh, bw)
+        nbr_h = nbrh_ref[...].reshape(4, bh, bw)
+        cap_src = csrc_ref[...].reshape(bh, bw)
+        cap_sink = csink_ref[...].reshape(bh, bw)
+        h_new, delta = _decide(e, h, cap, nbr_h, cap_src, cap_sink,
+                               nnodes_ref[0])
+        hnew_ref[...] = h_new.reshape(hnew_ref.shape)
+        delta_ref[...] = delta.reshape(delta_ref.shape)
+
+    @pl.when(i >= nact_ref[b])
+    def _inactive_tile():  # identity: no active node -> no push, no relabel
+        hnew_ref[...] = h_ref[...]
+        delta_ref[...] = jnp.zeros_like(delta_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("block_h", "block_w",
@@ -113,4 +159,81 @@ def grid_push_decide(e, h, cap, nbr_h, cap_src, cap_sink, n_nodes,
         out_shape=out_shape,
         interpret=interpret,
     )(*args)
+    return h_new, delta
+
+
+@functools.partial(jax.jit, static_argnames=("block_h", "block_w",
+                                             "interpret"))
+def grid_push_decide_sched(e, h, cap, nbr_h, cap_src, cap_sink, sched,
+                           n_active, n_nodes, *, block_h: int = 64,
+                           block_w: int = 64, interpret: bool = True):
+    """Active-tile-scheduled push/relabel decision (balanced backend).
+
+    Same outputs as ``grid_push_decide`` — ``(h_new, delta)`` with
+    ``delta[p]`` the flow pushed toward plane p ∈ [sink, source, UP, DOWN,
+    LEFT, RIGHT] — but the pallas grid runs over a COMPACTED TILE SCHEDULE
+    instead of fixed (i, j) tiling:
+
+    Args:
+      e / h / cap_src / cap_sink: ``(B, H, W)`` state planes.
+      cap / nbr_h: ``(4, B, H, W)``.
+      sched: ``(B, T)`` int32 — per instance, a PERMUTATION of the tile
+        ids ``0..T-1`` (``T = (H//block_h) * (W//block_w)``, row-major)
+        with every tile containing an active vertex compacted to the
+        front (``repro.kernels.grid_push.ops.tile_schedule``).
+      n_active: ``(B,)`` int32 — how many leading schedule entries are
+        active; programs past it take the identity fast path.
+      n_nodes: scalar int32 (the paper's N).
+
+    ``sched`` and ``n_active`` ride scalar prefetch
+    (``pltpu.PrefetchScalarGridSpec``) so the BLOCK INDEX MAPS themselves
+    gather the scheduled tile — the kernel's memory traffic follows the
+    schedule, which is what makes the dispatch workload-balanced rather
+    than grid-shaped. Inactive tiles are provably identity under one
+    Jacobi round, so the result is bit-identical to ``grid_push_decide``
+    on the full grid (asserted in tests/test_balanced.py).
+    """
+    B, H, W = e.shape
+    bh, bw = min(block_h, H), min(block_w, W)
+    if H % bh:
+        bh = H
+    if W % bw:
+        bw = W
+    ntw = W // bw
+    T = (H // bh) * ntw
+    assert sched.shape == (B, T), (sched.shape, B, T)
+
+    def tile2d(b, i, sched, nact, nn):
+        t = sched[b, i]
+        return (b, t // ntw, t % ntw)
+
+    def tile4(b, i, sched, nact, nn):
+        t = sched[b, i]
+        return (0, b, t // ntw, t % ntw)
+
+    def tile6(b, i, sched, nact, nn):
+        t = sched[b, i]
+        return (0, b, t // ntw, t % ntw)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,   # sched, n_active, n_nodes
+        grid=(B, T),
+        in_specs=[pl.BlockSpec((1, bh, bw), tile2d),
+                  pl.BlockSpec((1, bh, bw), tile2d),
+                  pl.BlockSpec((4, 1, bh, bw), tile4),
+                  pl.BlockSpec((4, 1, bh, bw), tile4),
+                  pl.BlockSpec((1, bh, bw), tile2d),
+                  pl.BlockSpec((1, bh, bw), tile2d)],
+        out_specs=[pl.BlockSpec((1, bh, bw), tile2d),
+                   pl.BlockSpec((6, 1, bh, bw), tile6)],
+    )
+    h_new, delta = pl.pallas_call(
+        _grid_push_sched_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, H, W), jnp.int32),
+                   jax.ShapeDtypeStruct((6, B, H, W), jnp.float32)],
+        interpret=interpret,
+    )(sched.astype(jnp.int32), n_active.astype(jnp.int32),
+      jnp.asarray([n_nodes], jnp.int32), e, h, cap, nbr_h, cap_src,
+      cap_sink)
     return h_new, delta

@@ -88,14 +88,23 @@ class ConvergenceStats:
         self._lock = threading.Lock()
         self._spread: dict[str, Ewma] = {}
         self._occupancy: dict[str, Ewma] = {}
+        self._rounds: dict[str, Ewma] = {}
+        self._heuristics: dict[str, Ewma] = {}
 
     def observe(self, kind: str, *, spread: float,
-                occupancy: float | None = None) -> None:
+                occupancy: float | None = None,
+                rounds: float | None = None,
+                heuristics: float | None = None) -> None:
         with self._lock:
             self._spread.setdefault(kind, Ewma(self._alpha)).update(spread)
             if occupancy is not None:
                 self._occupancy.setdefault(
                     kind, Ewma(self._alpha)).update(occupancy)
+            if rounds is not None:
+                self._rounds.setdefault(kind, Ewma(self._alpha)).update(rounds)
+            if heuristics is not None:
+                self._heuristics.setdefault(
+                    kind, Ewma(self._alpha)).update(heuristics)
 
     def spread(self, kind: str) -> float | None:
         with self._lock:
@@ -107,10 +116,24 @@ class ConvergenceStats:
             e = self._occupancy.get(kind)
             return None if e is None else e.value
 
-    def kinds(self) -> tuple[str, ...]:
-        """Every kind observed so far (union of spread/occupancy keys)."""
+    def rounds(self, kind: str) -> float | None:
+        """EWMA of per-dispatch mean solver rounds (``rounds_mean``)."""
         with self._lock:
-            return tuple(dict.fromkeys([*self._spread, *self._occupancy]))
+            e = self._rounds.get(kind)
+            return None if e is None else e.value
+
+    def heuristics(self, kind: str) -> float | None:
+        """EWMA of per-dispatch mean heuristic invocations (``heur_mean``)."""
+        with self._lock:
+            e = self._heuristics.get(kind)
+            return None if e is None else e.value
+
+    def kinds(self) -> tuple[str, ...]:
+        """Every kind observed so far (union of all stat keys)."""
+        with self._lock:
+            return tuple(dict.fromkeys(
+                [*self._spread, *self._occupancy, *self._rounds,
+                 *self._heuristics]))
 
 
 class SchedulerMetrics:
@@ -121,8 +144,11 @@ class SchedulerMetrics:
     dispatches by ``(kind, driver)`` where driver is ``masked`` or
     ``compacted``. Gauges: current queue depth. Distributions: ticket
     latency (submit -> future resolution) percentiles, batch-occupancy
-    EWMA (real instances / max_batch), convergence-spread EWMA, and the
-    compacted driver's live-count decay (via
+    EWMA (real instances / max_batch), convergence-spread EWMA, per-kind
+    solver-rounds and heuristic-invocation EWMAs (``rounds_ewma`` /
+    ``heuristics_ewma`` — the workload-difficulty gauges fed from
+    ``BucketStats.rounds_mean``/``heur_mean``), and the compacted
+    driver's live-count decay (via
     ``repro.core.solver_loop.trace_cycles``).
 
     Continuous batching (``refill`` snapshot key): sessions opened and
@@ -161,10 +187,12 @@ class SchedulerMetrics:
             self._queue_depth = queue_depth
 
     def record_dispatch(self, kind: str, *, compact: bool, spread: float,
-                        occupancy: float) -> None:
+                        occupancy: float, rounds: float | None = None,
+                        heuristics: float | None = None) -> None:
         with self._lock:
             self._dispatches[(kind, "compacted" if compact else "masked")] += 1
-        self.convergence.observe(kind, spread=spread, occupancy=occupancy)
+        self.convergence.observe(kind, spread=spread, occupancy=occupancy,
+                                 rounds=rounds, heuristics=heuristics)
 
     def record_done(self, latency_ms: float, *, ok: bool = True) -> None:
         with self._lock:
@@ -241,6 +269,9 @@ class SchedulerMetrics:
         snap["spread_ewma"] = {k: self.convergence.spread(k) for k in kinds}
         snap["occupancy_ewma"] = {
             k: self.convergence.occupancy(k) for k in kinds}
+        snap["rounds_ewma"] = {k: self.convergence.rounds(k) for k in kinds}
+        snap["heuristics_ewma"] = {
+            k: self.convergence.heuristics(k) for k in kinds}
         return snap
 
 

@@ -424,7 +424,8 @@ class AsyncSolverEngine:
                     prep, compact=compact)
             self.metrics.record_dispatch(
                 kind, compact=compact, spread=stats.spread,
-                occupancy=stats.n_real / self.max_batch)
+                occupancy=stats.n_real / self.max_batch,
+                rounds=stats.rounds_mean, heuristics=stats.heur_mean)
             results.update(out)
         now = time.monotonic()
         for i, r in enumerate(reqs):

@@ -1,0 +1,217 @@
+"""backend="balanced": stall-driven relabel + active-tile scheduling.
+
+The contracts under test:
+
+* CORRECTNESS — balanced (and every other backend) matches the scipy
+  oracle on the adversarial generator families the backend was built to
+  beat (``repro.core.maxflow.ref.ADVERSARIAL_GENERATORS``);
+* DETERMINISM — balanced keeps the per-instance purity contract: batched
+  == compacted == loop-of-singles, bit-exact, including the new
+  ``heuristics`` counter (and sharded, when devices allow — the slow
+  subprocess test relaunches this file under 8 emulated host devices);
+* INVARIANT — ``check_no_violations`` holds after EVERY heuristic
+  invocation: cutting a solve off at ``k * rounds_per_heuristic`` rounds
+  lands exactly after the k-th relabel opportunity, so sweeping k probes
+  the state right where the bidirectional BFS relabel just ran;
+* THE WIN — balanced needs strictly fewer rounds than xla's fixed-cadence
+  relabel on the checkerboard family (benchmarks/RESULTS_adversarial.md
+  has the full matrix);
+* S1 — unknown backends raise ``ValueError`` naming the valid set.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st  # optional-hypothesis shim
+
+from repro.core.batch import solve_maxflow_batch, stack_grid_problems
+from repro.core.maxflow.grid import (VALID_BACKENDS, GridProblem, _round_fn,
+                                     check_no_violations, maxflow_grid,
+                                     maxflow_grid_batch)
+from repro.core.maxflow.ref import (ADVERSARIAL_GENERATORS, maxflow_grid_ref,
+                                    random_grid_problem)
+from repro.launch.mesh import make_solver_mesh
+
+N_DEV = len(jax.devices())
+FORCE_FLAG = "--xla_force_host_platform_device_count=8"
+multi = pytest.mark.skipif(
+    N_DEV < 2, reason="needs >=2 devices; covered via the subprocess test")
+SHARD_COUNTS = sorted({2, N_DEV}) if N_DEV >= 2 else []
+
+BACKENDS = list(VALID_BACKENDS)
+
+
+def _problem(gname, H, W, seed=0):
+    cap, cs, ct = ADVERSARIAL_GENERATORS[gname](
+        np.random.default_rng(seed), H, W)
+    return GridProblem(*map(jnp.asarray, (cap, cs, ct))), (cap, cs, ct)
+
+
+# --------------------------------------------------------- S1: backend knob
+
+def test_unknown_backend_raises():
+    with pytest.raises(ValueError, match="unknown maxflow backend 'nope'"):
+        _round_fn("nope")
+    with pytest.raises(ValueError, match="balanced"):
+        maxflow_grid(_problem("checkerboard", 4, 4)[0], backend="nope")
+
+
+# ------------------------------------------------- oracle equality, all gens
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("gname", sorted(ADVERSARIAL_GENERATORS))
+def test_adversarial_matches_oracle(gname, backend):
+    prob, (cap, cs, ct) = _problem(gname, 16, 16)
+    ref = maxflow_grid_ref(cap, cs, ct)
+    res = maxflow_grid(prob, backend=backend, max_rounds=500_000)
+    assert bool(res.converged)
+    assert abs(float(res.flow) - ref) < 1e-4, (gname, backend)
+    assert bool(check_no_violations(res.state))
+
+
+def test_balanced_random_grids_match_oracle():
+    for seed in range(4):
+        rng = np.random.default_rng(seed)
+        cap, cs, ct = random_grid_problem(rng, 12, 12)
+        ref = maxflow_grid_ref(cap, cs, ct)
+        res = maxflow_grid(GridProblem(*map(jnp.asarray, (cap, cs, ct))),
+                           backend="balanced")
+        assert bool(res.converged)
+        assert abs(float(res.flow) - ref) < 1e-4
+
+
+# ------------------------------------------------------------------ the win
+
+def test_balanced_beats_xla_rounds_on_checkerboard():
+    """The acceptance headline at test scale: >=2x fewer rounds at 32**2."""
+    prob, _ = _problem("checkerboard", 32, 32)
+    r_xla = maxflow_grid(prob, backend="xla", max_rounds=500_000)
+    r_bal = maxflow_grid(prob, backend="balanced", max_rounds=500_000)
+    assert bool(r_xla.converged) and bool(r_bal.converged)
+    assert float(r_xla.flow) == float(r_bal.flow)
+    assert int(r_bal.rounds) * 2 <= int(r_xla.rounds), \
+        (int(r_bal.rounds), int(r_xla.rounds))
+    # the stall trigger is why: strictly fewer relabel invocations too
+    assert int(r_bal.heuristics) < int(r_xla.heuristics)
+
+
+def test_fixed_cadence_heuristics_counter():
+    """xla's counter must equal the number of completed cycles exactly."""
+    prob, _ = _problem("checkerboard", 8, 8)
+    res = maxflow_grid(prob, backend="xla", rounds_per_heuristic=8)
+    assert int(res.heuristics) == (int(res.rounds) + 7) // 8
+
+
+# ------------------------------------------ determinism: batched == singles
+
+@pytest.mark.parametrize("compact", [False, True])
+def test_balanced_batched_bitmatches_singles(compact):
+    probs = [_problem(g, 8, 8, seed=s)[0]
+             for s in range(2) for g in sorted(ADVERSARIAL_GENERATORS)]
+    batch = stack_grid_problems(probs)
+    res = maxflow_grid_batch(batch, backend="balanced", compact=compact)
+    for b, p in enumerate(probs):
+        single = maxflow_grid(p, backend="balanced")
+        assert float(res.flow[b]) == float(single.flow)
+        assert int(res.rounds[b]) == int(single.rounds)
+        assert int(res.heuristics[b]) == int(single.heuristics)
+        np.testing.assert_array_equal(np.asarray(res.cut[b]),
+                                      np.asarray(single.cut))
+        np.testing.assert_array_equal(np.asarray(res.state.h[b]),
+                                      np.asarray(single.state.h))
+        np.testing.assert_array_equal(np.asarray(res.state.e[b]),
+                                      np.asarray(single.state.e))
+
+
+@multi
+def test_balanced_sharded_bitmatches_unsharded():
+    gens = sorted(ADVERSARIAL_GENERATORS)
+    probs = [_problem(gens[i % len(gens)], 8, 8, seed=i)[0]
+             for i in range(8)]      # 8 instances: divisible by every lane
+    batch = stack_grid_problems(probs)
+    base = maxflow_grid_batch(batch, backend="balanced")
+    for s in SHARD_COUNTS:
+        shard = maxflow_grid_batch(batch, backend="balanced", compact=True,
+                                   mesh=make_solver_mesh(s))
+        for name, la, lb in zip(base._fields, base, shard):
+            if isinstance(la, tuple):
+                la, lb = jnp.asarray(la.e), jnp.asarray(lb.e)
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                          err_msg=name)
+
+
+@pytest.mark.slow  # full balanced suite again in a fresh 8-dev process
+@pytest.mark.skipif(N_DEV >= 2, reason="already multi-device")
+def test_forced_multi_device_subprocess():
+    root = pathlib.Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " " + FORCE_FLAG).strip()
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "-x", "-q", str(__file__),
+         "-k", "sharded"],
+        cwd=root, env=env, capture_output=True, text=True, timeout=1500)
+    assert r.returncode == 0, f"\n--- stdout ---\n{r.stdout}\n{r.stderr}"
+    assert "passed" in r.stdout
+
+
+# ----------------------------------------------- S2: stats plumbing surfaces
+
+def test_bucket_stats_carry_heuristics():
+    probs = [_problem("checkerboard", 8, 8)[0],
+             _problem("long_path", 8, 8)[0]]
+    stats_out: list = []
+    res = solve_maxflow_batch(probs, backend="balanced", stats_out=stats_out)
+    [stats] = stats_out
+    assert stats.heur_min is not None and stats.heur_max is not None
+    assert stats.heur_min <= stats.heur_mean <= stats.heur_max
+    assert {int(r.heuristics) for r in res} \
+        >= {stats.heur_min, stats.heur_max}
+
+
+def test_metrics_snapshot_has_rounds_and_heuristics():
+    from repro.serve.metrics import SchedulerMetrics
+    m = SchedulerMetrics()
+    m.record_dispatch("maxflow", compact=False, spread=0.5, occupancy=1.0,
+                      rounds=96.0, heuristics=3.0)
+    snap = m.snapshot()
+    assert snap["rounds_ewma"]["maxflow"] == 96.0
+    assert snap["heuristics_ewma"]["maxflow"] == 3.0
+
+
+# ------------------------- S3: invariant after every heuristic invocation
+
+def _invariant_after_each_heuristic(prob, backend, rph=8, cycles=6):
+    """Stop the solve after k cycles for k=1..cycles: the returned state is
+    exactly the state right after the k-th relabel opportunity ran."""
+    for k in range(1, cycles + 1):
+        res = maxflow_grid(prob, backend=backend, rounds_per_heuristic=rph,
+                           max_rounds=k * rph)
+        assert bool(check_no_violations(res.state)), (backend, k)
+        if bool(res.converged):
+            break
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("gname", sorted(ADVERSARIAL_GENERATORS))
+def test_no_violations_after_each_heuristic_fixed_seeds(gname, backend):
+    """Fixed-seed fallback for the hypothesis property below."""
+    prob, _ = _problem(gname, 8, 8, seed=1)
+    _invariant_after_each_heuristic(prob, backend)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10_000),
+       st.sampled_from(sorted(ADVERSARIAL_GENERATORS)),
+       st.sampled_from(BACKENDS),
+       st.integers(4, 10), st.integers(4, 10))
+def test_no_violations_property(seed, gname, backend, H, W):
+    """Property: the height invariant survives every heuristic invocation,
+    for every backend, on every adversarial family at random shapes."""
+    prob, _ = _problem(gname, H, W, seed=seed)
+    _invariant_after_each_heuristic(prob, backend, rph=4, cycles=5)

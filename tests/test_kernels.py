@@ -106,6 +106,8 @@ def test_grid_push_round_bit_identical():
         a = jacobi_round(st, n)
         b = jacobi_round_pallas(st, n, block_h=8, block_w=8, interpret=True)
         for fa, fb, nm in zip(a, b, a._fields):
+            if fa is None and fb is None:  # heur counter untracked here
+                continue
             np.testing.assert_allclose(np.asarray(fa), np.asarray(fb),
                                        err_msg=nm)
         st = a
