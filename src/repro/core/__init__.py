@@ -22,10 +22,12 @@ matching solvers — lives here:
   ``solve_assignment_batch`` are its historical per-kind spellings.
 * ``freeze`` — the per-instance liveness select behind batched solving
   (``repro.core.masking``).
-* ``LoopSpec`` / ``run_masked`` / ``run_compacted`` / ``trace_cycles`` —
-  the unified solver-loop runtime (``repro.core.solver_loop``): masked
-  iteration, early-exit compaction, and the per-cycle live-count trace
-  hook, shared by every kind.
+* ``LoopSpec`` / ``run_masked`` / ``run_compacted`` / ``cycle_events`` /
+  ``CycleEvent`` / ``trace_cycles`` — the unified solver-loop runtime
+  (``repro.core.solver_loop``): masked iteration, early-exit compaction,
+  and the structured per-cycle telemetry stream both drivers emit
+  (``trace_cycles`` is the legacy (cycle, n_live) shim), shared by every
+  kind.
 * ``PreparedBucket`` / ``BucketStats`` — the host-stage hand-off and the
   per-dispatch occupancy/round-spread telemetry (``stats_out=`` on the
   batch front ends; the signal behind ``repro.serve.scheduler``'s
@@ -46,18 +48,20 @@ from repro.core.matching import (MatchingResult, match_bipartite,
                                  match_bipartite_batch)
 from repro.core.maxflow.grid import (GridFlowResult, GridProblem,
                                      maxflow_grid, maxflow_grid_batch)
-from repro.core.solver_loop import (LoopSpec, run_compacted, run_masked,
-                                    trace_cycles)
+from repro.core.solver_loop import (CycleEvent, LoopSpec, cycle_events,
+                                    run_compacted, run_masked, trace_cycles)
 
 __all__ = [
     "AssignmentResult",
     "BucketStats",
+    "CycleEvent",
     "GridFlowResult",
     "GridProblem",
     "LoopSpec",
     "MatchingResult",
     "PreparedBucket",
     "SolverKind",
+    "cycle_events",
     "freeze",
     "get_kind",
     "match_bipartite",

@@ -47,7 +47,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.solver_loop import LoopSpec, run_compacted, run_masked
+from repro.core.solver_loop import (LoopSpec, masked_events_active,
+                                    run_compacted, run_masked)
 
 INF = jnp.int32(2 ** 30)
 
@@ -461,6 +462,32 @@ def _solve_assignment_compact(
     return _assignment_finalize_jit(jnp.asarray(w, jnp.int32), state.st)
 
 
+def _solve_assignment_stepped(
+    w: jax.Array,
+    *,
+    method: str,
+    alpha: int,
+    max_rounds: int,
+    rounds_per_heuristic: int,
+    use_price_update: bool,
+    use_arc_fixing: bool,
+    backend: str,
+) -> AssignmentResult:
+    """Eager masked solve for cycle telemetry (any batch rank).
+
+    Same init/finalize jits as the compacted path around an eager
+    ``run_masked``, which host-steps the jitted cycle under the active
+    ``cycle_events(masked=True)`` hook that routed here.  Bit-matches
+    ``_solve_assignment_impl`` (tests/test_obs.py).
+    """
+    w_i = jnp.asarray(w, jnp.int32)
+    state = _scale_init_jit(w_i, alpha=alpha)
+    spec = _assignment_spec(method, alpha, max_rounds, rounds_per_heuristic,
+                            use_price_update, use_arc_fixing, backend)
+    state, _ = run_masked(spec, state, state.eps.shape)
+    return _assignment_finalize_jit(w_i, state.st)
+
+
 def solve_assignment(
     w: jax.Array,
     *,
@@ -544,6 +571,8 @@ def solve_assignment(
             lanes = compact_lanes(mesh, mesh_axis, w.shape[0])
         return _solve_assignment_compact(w, lanes=lanes, **kw)
     if mesh is None:
+        if masked_events_active():
+            return _solve_assignment_stepped(w, **kw)
         return _solve_assignment_impl(w, **kw)
     if w.ndim != 3:
         raise ValueError(

@@ -43,7 +43,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.solver_loop import LoopSpec, run_compacted, run_masked
+from repro.core.solver_loop import (LoopSpec, masked_events_active,
+                                    run_compacted, run_masked)
 
 INF = jnp.int32(2 ** 30)
 
@@ -261,6 +262,22 @@ def _match_batch_compact(adj, *, max_rounds, greedy_init, backend,
     return _match_finalize_jit(state, rounds)
 
 
+def _match_batch_stepped(adj, *, max_rounds, greedy_init,
+                         backend) -> MatchingResult:
+    """Eager masked solve for cycle telemetry (public (B, ...) layout).
+
+    Same init/finalize jits as the compacted path around an eager
+    ``run_masked``, which host-steps the jitted phase under the active
+    ``cycle_events(masked=True)`` hook that routed here.  Bit-matches
+    ``_match_batch_impl`` (tests/test_obs.py).
+    """
+    state = _match_init_jit(jnp.asarray(adj, jnp.bool_),
+                            greedy_init=greedy_init)
+    spec = _matching_spec(max_rounds, backend)
+    state, rounds = run_masked(spec, state, adj.shape[:-2])
+    return _match_finalize_jit(state, rounds)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("max_rounds", "greedy_init", "backend"))
 def match_bipartite(
@@ -354,6 +371,8 @@ def match_bipartite_batch(
             lanes = compact_lanes(mesh, mesh_axis, adj.shape[0])
         return _match_batch_compact(adj, lanes=lanes, **kw)
     if mesh is None:
+        if masked_events_active():
+            return _match_batch_stepped(adj, **kw)
         return _match_batch_impl(adj, **kw)
     from repro.launch.mesh import dispatch_sharded
     return dispatch_sharded(_match_batch_impl, (adj,), adj.shape[0],

@@ -41,7 +41,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.solver_loop import LoopSpec, run_compacted, run_masked
+from repro.core.solver_loop import (LoopSpec, masked_events_active,
+                                    run_compacted, run_masked)
 
 UP, DOWN, LEFT, RIGHT = 0, 1, 2, 3
 _OPP = (DOWN, UP, RIGHT, LEFT)
@@ -386,7 +387,8 @@ def _grid_spec(rounds_per_heuristic: int, max_rounds: int,
 
     return LoopSpec(cycle=cycle, live=live,
                     rounds_per_cycle=rounds_per_heuristic,
-                    lead_axes_fn=lead_axes)
+                    lead_axes_fn=lead_axes,
+                    heur=lambda s: s.heur)
 
 
 def _grid_init(cap0, cs0, ct0, *, bfs_max_iters: int) -> GridFlowState:
@@ -478,6 +480,29 @@ def _grid_batch_compact(cap0, cs0, ct0, *, rounds_per_heuristic, max_rounds,
     state, rounds = run_compacted(spec, state, cs0.shape[0], lanes=lanes)
     res = _grid_finalize_jit(state, rounds, bfs_max_iters=bfs_max_iters)
     # public layout: batch axis leads everywhere, including state.cap
+    return res._replace(
+        state=res.state._replace(cap=jnp.moveaxis(res.state.cap, 0, 1)))
+
+
+def _grid_batch_stepped(cap0, cs0, ct0, *, rounds_per_heuristic, max_rounds,
+                        bfs_max_iters, backend,
+                        stall_threshold=0.05) -> GridFlowResult:
+    """Eager masked solve for cycle telemetry (public (B, ...) layout).
+
+    Same init/finalize jits as the compacted path around an eager
+    ``run_masked`` call, which — under the active
+    ``cycle_events(masked=True)`` hook that routed here — host-steps the
+    jitted cycle and emits per-cycle events.  Bit-matches
+    ``_grid_batch_impl`` (the per-cycle jit granularity is what the
+    compacted driver already bit-matches at; tests/test_obs.py).
+    """
+    state = _grid_init_jit(jnp.moveaxis(jnp.asarray(cap0), 1, 0),
+                           jnp.asarray(cs0), jnp.asarray(ct0),
+                           bfs_max_iters=bfs_max_iters)
+    spec = _grid_spec(rounds_per_heuristic, max_rounds, bfs_max_iters,
+                      backend, stall_threshold)
+    state, rounds = run_masked(spec, state, cs0.shape[:1])
+    res = _grid_finalize_jit(state, rounds, bfs_max_iters=bfs_max_iters)
     return res._replace(
         state=res.state._replace(cap=jnp.moveaxis(res.state.cap, 0, 1)))
 
@@ -633,6 +658,8 @@ def maxflow_grid_batch(
             lanes = compact_lanes(mesh, mesh_axis, cs0.shape[0])
         return _grid_batch_compact(cap0, cs0, ct0, lanes=lanes, **kw)
     if mesh is None:
+        if masked_events_active():
+            return _grid_batch_stepped(cap0, cs0, ct0, **kw)
         return _grid_batch_impl(cap0, cs0, ct0, **kw)
     from repro.launch.mesh import dispatch_sharded
     return dispatch_sharded(_grid_batch_impl, (cap0, cs0, ct0),

@@ -31,6 +31,8 @@ closed-batch path (same padding shape).  The serving layer
 """
 from __future__ import annotations
 
+import contextlib
+import time
 from typing import Any, Callable, NamedTuple
 
 import jax
@@ -106,18 +108,23 @@ class RefillSolver:
       mesh / mesh_axis: optional device mesh; slots split into per-device
         lanes (``repro.launch.mesh.compact_lanes`` — ``capacity`` must
         divide evenly across the mesh), admissions refill within lanes.
+      tracer: optional ``repro.obs.Tracer`` — the session records a
+        ``device-solve`` span around its run and ``bucket/pad`` spans
+        around each payload intake (the serving engines thread their
+        tracer through here). ``None`` records nothing.
       **solver_kw: the kind's static solver knobs (``backend=``,
         ``max_rounds=``, ...), forwarded to the refill runtime factory.
     """
 
     def __init__(self, kind: str, *, shape, capacity: int, mesh=None,
-                 mesh_axis: str | None = None, **solver_kw):
+                 mesh_axis: str | None = None, tracer=None, **solver_kw):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.kind = get_kind(kind)
         self.rt = refill_runtime(kind, **solver_kw)
         self.shape = tuple(int(s) for s in shape)
         self.capacity = int(capacity)
+        self.tracer = tracer
         self._lanes = None
         if mesh is not None:
             from repro.launch.mesh import compact_lanes
@@ -178,6 +185,7 @@ class RefillSolver:
             on failure, reported through ``on_error``)."""
             idx = counters["n_req"]
             counters["n_req"] += 1
+            t0 = time.monotonic() if self.tracer is not None else 0.0
             try:
                 p = self.kind.validate(payload)
                 if not self.fits(p):
@@ -188,6 +196,10 @@ class RefillSolver:
             except Exception as e:
                 _error(idx, e)
                 return None
+            if self.tracer is not None:
+                self.tracer.record("bucket/pad", t0, time.monotonic(),
+                                   kind=self.kind.name, n=1,
+                                   bucket=list(shape))
             problems[idx] = p1
             metas[idx] = (rt.shape_of(p), p)
             return idx
@@ -255,6 +267,11 @@ class RefillSolver:
                 if on_result is not None:
                     on_result(idx, res)
 
-        run_compacted(rt.spec, state, cap, lanes=session._lanes,
-                      refill=_Hook())
+        span = (contextlib.nullcontext() if self.tracer is None else
+                self.tracer.span("device-solve", kind=self.kind.name,
+                                 bucket=list(shape), capacity=cap,
+                                 driver="refill"))
+        with span:
+            run_compacted(rt.spec, state, cap, lanes=session._lanes,
+                          refill=_Hook())
         return results

@@ -65,31 +65,101 @@ import numpy as np
 
 from repro.core.masking import freeze
 
-# Per-cycle live-count trace hook for the COMPACTED driver. ``run_masked``
-# is a jitted while_loop — its liveness never reaches the host — but
-# ``run_compacted`` fetches the live set every cycle anyway, so exposing it
-# costs nothing. Thread-local (a ContextVar) on purpose: the serving
-# scheduler's lane threads trace their own dispatches without seeing each
-# other's cycles.
-_cycle_trace: contextvars.ContextVar[Callable | None] = \
-    contextvars.ContextVar("solver_loop_cycle_trace", default=None)
+class CycleEvent(NamedTuple):
+    """One structured per-cycle telemetry sample (``cycle_events``).
+
+    Emitted BEFORE each cycle dispatches, by both drivers:
+
+    * ``driver`` — ``"masked"`` or ``"compacted"``.
+    * ``cycle`` — host cycle index, from 0.
+    * ``n_live`` — still-live instances entering this cycle (all lanes).
+    * ``rounds_total`` — sum of the per-slot rounds counters so far (with
+      refill, counters describe current slot OCCUPANTS — admissions reset
+      their slot, so treat this as a diagnostic, not a monotone total).
+    * ``gathered`` — instances this cycle will actually compute: the
+      padded pow2 sub-batch total for the compacted driver, the full
+      batch size for the masked driver (its converged instances still pay
+      FLOPs — exactly the waste ``gathered - n_live`` measures).
+    * ``heur_total`` — sum of per-instance heuristic-invocation counters
+      over the live set (the balanced backend's ``heuristics``), or
+      ``None`` when the spec registers no ``heur`` extractor or the hook
+      was installed without ``detail=True`` (fetching counters costs a
+      device read per cycle, so it is opt-in).
+    """
+
+    driver: str
+    cycle: int
+    n_live: int
+    rounds_total: int
+    gathered: int
+    heur_total: int | None
+
+
+class _CycleHook(NamedTuple):
+    fn: Callable          # CycleEvent -> None
+    masked: bool          # also host-step run_masked to observe its cycles
+    detail: bool          # fetch heur counters per cycle (a device read)
+
+
+# Per-cycle telemetry hook. ``run_compacted`` fetches the live set every
+# host cycle anyway, so emitting is nearly free there; ``run_masked`` is a
+# jitted while_loop whose liveness never reaches the host — it emits only
+# for hooks installed with ``masked=True``, by HOST-STEPPING the same
+# jitted cycle (see ``run_masked``). Thread-local (a ContextVar) on
+# purpose: the serving scheduler's lane threads trace their own
+# dispatches without seeing each other's cycles — and the disabled cost
+# is one contextvar read per solve.
+_cycle_hook: contextvars.ContextVar["_CycleHook | None"] = \
+    contextvars.ContextVar("solver_loop_cycle_hook", default=None)
+
+
+@contextlib.contextmanager
+def cycle_events(fn: Callable, *, masked: bool = False,
+                 detail: bool = False):
+    """Install ``fn(event: CycleEvent)`` as this thread's cycle hook.
+
+    While active, every host cycle of ``run_compacted`` emits one
+    ``CycleEvent`` (all lanes aggregated) BEFORE dispatching that cycle.
+    With ``masked=True``, eager ``run_masked`` solves emit too: the
+    driver host-steps its jitted cycle instead of lowering one fused
+    while_loop — bit-identical results (the same per-cycle jit the
+    compacted driver uses), at the cost of a host sync per cycle, so the
+    serving scheduler's always-on metrics hook leaves it off.  With
+    ``detail=True``, events include ``heur_total`` for specs that
+    register a ``heur`` extractor (one extra device fetch per cycle).
+
+    The hook must be cheap and must not raise.
+    """
+    token = _cycle_hook.set(_CycleHook(fn, masked, detail))
+    try:
+        yield
+    finally:
+        _cycle_hook.reset(token)
 
 
 @contextlib.contextmanager
 def trace_cycles(fn: Callable[[int, int], None]):
-    """Install ``fn(cycle_index, n_live)`` as this thread's compaction trace.
+    """Back-compat shim over ``cycle_events``: ``fn(cycle_index, n_live)``.
 
-    While active, every host cycle of ``run_compacted`` reports the total
-    number of still-live instances (across all lanes) BEFORE dispatching
-    that cycle. Used by ``repro.serve.metrics`` to record live-set decay
-    curves; tests use it to assert compaction actually shrinks the working
-    set. The hook must be cheap and must not raise.
+    The original compaction-trace hook (``repro.serve.metrics`` records
+    live-set decay through it). Equivalent to ``cycle_events`` with an
+    adapter that drops every field but ``cycle`` and ``n_live``; masked
+    solves do not emit (the pre-``CycleEvent`` behaviour).
     """
-    token = _cycle_trace.set(fn)
-    try:
+    with cycle_events(lambda ev: fn(ev.cycle, ev.n_live)):
         yield
-    finally:
-        _cycle_trace.reset(token)
+
+
+def masked_events_active() -> bool:
+    """Is a ``cycle_events(masked=True)`` hook installed on this thread?
+
+    Solver batch wrappers consult this to route an eager masked solve
+    through the host-stepped driver (init/finalize jits + per-cycle jit)
+    instead of the fused jitted entry point, so the hook can observe
+    per-cycle liveness. False for plain ``trace_cycles`` hooks.
+    """
+    hook = _cycle_hook.get()
+    return hook is not None and hook.masked
 
 
 class LoopSpec(NamedTuple):
@@ -105,6 +175,10 @@ class LoopSpec(NamedTuple):
     live: Callable         # (state, rounds) -> (...,) bool per instance
     rounds_per_cycle: int
     lead_axes_fn: Callable | None = None   # (leaf, batch_ndim) -> int
+    # optional per-instance heuristic-invocation counters, state -> (...,)
+    # int (the balanced backend's ``heuristics``); folded into CycleEvent
+    # .heur_total for detail hooks
+    heur: Callable | None = None
 
 
 def _lead(spec: LoopSpec, batch_ndim: int):
@@ -123,9 +197,23 @@ def run_masked(spec: LoopSpec, state, batch_shape: tuple):
     single-instance loop — the freeze select is the identity while it runs —
     so single and batched solves share one trajectory.
 
+    Telemetry: an EAGER call under a ``cycle_events(masked=True)`` hook
+    host-steps the same body one jitted cycle at a time (``_masked_step``)
+    so per-cycle liveness reaches the hook — bit-identical results, since
+    the per-cycle jit is the granularity the compacted driver already
+    bit-matches at.  Inside a trace (tracer leaves) the hook cannot apply
+    and the fused while_loop is lowered as always — jit caches never
+    depend on the hook.
+
     Returns ``(state, rounds)`` where ``rounds`` counts, per instance, the
     Jacobi rounds executed while that instance was live.
     """
+    hook = _cycle_hook.get()
+    if (hook is not None and hook.masked
+            and not any(isinstance(leaf, jax.core.Tracer)
+                        for leaf in jax.tree_util.tree_leaves(state))):
+        return _run_masked_stepped(spec, state, batch_shape, hook)
+
     lead = _lead(spec, len(batch_shape))
 
     def cond(carry):
@@ -140,6 +228,50 @@ def run_masked(spec: LoopSpec, state, batch_shape: tuple):
 
     return jax.lax.while_loop(
         cond, body, (state, jnp.zeros(batch_shape, jnp.int32)))
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "batch_ndim"))
+def _masked_step(spec: LoopSpec, state, rounds, batch_ndim: int):
+    """One masked cycle (exactly ``run_masked``'s while body) + next mask."""
+    lead = _lead(spec, batch_ndim)
+    lv = spec.live(state, rounds)
+    s = freeze(lv, spec.cycle(state), state, lead_axes_fn=lead)
+    r = rounds + jnp.where(lv, spec.rounds_per_cycle, 0)
+    return s, r, spec.live(s, r)
+
+
+def _masked_heur_total(spec: LoopSpec, state, live_mask) -> int | None:
+    if spec.heur is None:
+        return None
+    h = np.asarray(_heur_vals(spec, state))
+    return int(np.sum(h * np.asarray(live_mask)))
+
+
+def _run_masked_stepped(spec: LoopSpec, state, batch_shape: tuple,
+                        hook: "_CycleHook"):
+    """Host-stepped masked driver: the telemetry path of ``run_masked``.
+
+    Executes the identical per-cycle body through one jitted step per
+    cycle, fetching the liveness mask between steps to emit
+    ``CycleEvent``s.  The iteration count and every value match the fused
+    while_loop (same cond-before-body structure, same freeze select).
+    """
+    bn = len(batch_shape)
+    n_total = int(np.prod(batch_shape, dtype=np.int64)) if batch_shape else 1
+    rounds = jnp.zeros(batch_shape, jnp.int32)
+    lv = np.asarray(_live_mask(spec, state, rounds))
+    cycle = 0
+    while bool(np.any(lv)):
+        heur_total = (_masked_heur_total(spec, state, lv)
+                      if hook.detail else None)
+        hook.fn(CycleEvent(
+            driver="masked", cycle=cycle, n_live=int(np.sum(lv)),
+            rounds_total=int(np.asarray(rounds).sum()),
+            gathered=n_total, heur_total=heur_total))
+        cycle += 1
+        state, rounds, lv_next = _masked_step(spec, state, rounds, bn)
+        lv = np.asarray(lv_next)
+    return state, rounds
 
 
 def bucket_size(n_live: int, cap: int) -> int:
@@ -181,6 +313,12 @@ def _compact_step(spec: LoopSpec, state, rounds):
 @functools.partial(jax.jit, static_argnames=("spec",))
 def _live_mask(spec: LoopSpec, state, rounds):
     return spec.live(state, rounds)
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _heur_vals(spec: LoopSpec, state):
+    """Per-instance heuristic-invocation counters (detail hooks only)."""
+    return spec.heur(state)
 
 
 def _emit_slot(spec: LoopSpec, refill, token, lane_state, slot: int,
@@ -232,6 +370,24 @@ def _admit_free(spec: LoopSpec, refill, lanes, lane_states, rounds,
                 _emit_slot(spec, refill, token, lane_states[i], s, 0)
                 free_idx[i] = np.concatenate(
                     [free_idx[i], np.asarray([s], dtype=free_idx[i].dtype)])
+
+
+def _compacted_event(spec: LoopSpec, hook: "_CycleHook", cycle: int, lanes,
+                     lane_states, live_idx, rounds) -> CycleEvent:
+    """Build the pre-dispatch ``CycleEvent`` of one compacted host cycle."""
+    gathered = sum(bucket_size(int(li.size), hi - lo)
+                   for (lo, hi, _), li in zip(lanes, live_idx) if li.size)
+    heur_total = None
+    if hook.detail and spec.heur is not None:
+        heur_total = 0
+        for st, li in zip(lane_states, live_idx):
+            if li.size:
+                heur_total += int(np.asarray(_heur_vals(spec, st))[li].sum())
+    return CycleEvent(
+        driver="compacted", cycle=cycle,
+        n_live=int(sum(li.size for li in live_idx)),
+        rounds_total=int(rounds.sum()), gathered=gathered,
+        heur_total=heur_total)
 
 
 def run_compacted(spec: LoopSpec, state, n_instances: int, *, lanes=None,
@@ -313,11 +469,12 @@ def run_compacted(spec: LoopSpec, state, n_instances: int, *, lanes=None,
         _admit_free(spec, refill, lanes, lane_states, rounds, slot_token,
                     live_idx, free_idx)
 
-    trace = _cycle_trace.get()
+    hook = _cycle_hook.get()
     cycle = 0
     while any(li.size for li in live_idx):
-        if trace is not None:
-            trace(cycle, int(sum(li.size for li in live_idx)))
+        if hook is not None:
+            hook.fn(_compacted_event(spec, hook, cycle, lanes, lane_states,
+                                     live_idx, rounds))
         cycle += 1
         pending: list = [None] * len(lanes)
         for i, (lo, hi, dev) in enumerate(lanes):

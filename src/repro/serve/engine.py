@@ -24,6 +24,7 @@ overlaps batch *k*'s device solve — see docs/serving.md.
 """
 from __future__ import annotations
 
+import time
 import warnings
 from typing import Any, NamedTuple
 
@@ -38,6 +39,7 @@ from repro.core.batch import (BucketStats, PreparedBucket,  # noqa: F401
                               validate_grid_problem)
 from repro.core.kinds import get_kind
 from repro.models.layers import Sharder
+from repro.obs.trace import current_tracer, step_annotation
 from repro.models.model import apply_model, init_caches
 
 
@@ -131,15 +133,24 @@ class SolverEngine:
       maxflow_kw / assignment_kw: DEPRECATED — the pre-registry spelling of
         ``solver_kw`` for the two original kinds; folded into
         ``solver_kw`` with a ``DeprecationWarning``.
+      tracer: optional ``repro.obs.Tracer`` recording lifecycle spans
+        (``submit`` / ``bucket/pad`` / ``device-solve``) through this
+        engine. Defaults to the AMBIENT tracer at construction time
+        (``repro.obs.use_tracer`` — captured once, because contextvars do
+        not cross the threads a scheduler may drive this engine from);
+        ``None`` (no ambient tracer) records nothing and costs one
+        ``None`` check per stage.
     """
 
     def __init__(self, *, mesh=None, mesh_axis: str | None = None,
                  bucket: str = "max", compact: bool = False,
                  solver_kw: dict[str, dict] | None = None,
                  maxflow_kw: dict | None = None,
-                 assignment_kw: dict | None = None):
+                 assignment_kw: dict | None = None,
+                 tracer=None):
         self.mesh, self.mesh_axis, self.bucket = mesh, mesh_axis, bucket
         self.compact = compact
+        self.tracer = tracer if tracer is not None else current_tracer()
         self.solver_kw = _merge_deprecated_kw(
             solver_kw, maxflow_kw, assignment_kw, "SolverEngine")
         self._next_ticket = 0
@@ -162,9 +173,13 @@ class SolverEngine:
         wedged by a bad queue entry. Unknown kinds raise ``ValueError``
         naming the registered ones.
         """
+        t0 = time.monotonic() if self.tracer is not None else 0.0
         payload = get_kind(kind).validate(payload)
         t = self._ticket()
         self._queues.setdefault(kind, []).append((t, payload))
+        if self.tracer is not None:
+            self.tracer.record("submit", t0, time.monotonic(),
+                               ticket=t, kind=kind)
         return t
 
     def submit_maxflow(self, problem) -> int:
@@ -194,9 +209,14 @@ class SolverEngine:
         this engine's bucket/mesh config) — the stage the async scheduler
         overlaps with the previous batch's device solve.
         """
-        return get_kind(kind).prepare_buckets(
-            payloads, bucket=self.bucket, mesh=self.mesh,
-            mesh_axis=self.mesh_axis)
+        if self.tracer is None:
+            return get_kind(kind).prepare_buckets(
+                payloads, bucket=self.bucket, mesh=self.mesh,
+                mesh_axis=self.mesh_axis)
+        with self.tracer.span("bucket/pad", kind=kind, n=len(payloads)):
+            return get_kind(kind).prepare_buckets(
+                payloads, bucket=self.bucket, mesh=self.mesh,
+                mesh_axis=self.mesh_axis)
 
     def solve_prepared(self, prep: PreparedBucket, *,
                        compact: bool | None = None) \
@@ -208,10 +228,20 @@ class SolverEngine:
         Returns ``({payload_position: result}, BucketStats)``.
         """
         compact = self.compact if compact is None else compact
-        return get_kind(prep.kind).solve_prepared(
-            prep, compact=compact, mesh=self.mesh,
-            mesh_axis=self.mesh_axis,
-            **self.solver_kw.get(prep.kind, {}))
+        if self.tracer is None:
+            return get_kind(prep.kind).solve_prepared(
+                prep, compact=compact, mesh=self.mesh,
+                mesh_axis=self.mesh_axis,
+                **self.solver_kw.get(prep.kind, {}))
+        driver = "compacted" if compact else "masked"
+        with self.tracer.span("device-solve", kind=prep.kind,
+                              bucket=list(prep.shape),
+                              n_real=len(prep.idxs), driver=driver), \
+                step_annotation(f"solve:{prep.kind}"):
+            return get_kind(prep.kind).solve_prepared(
+                prep, compact=compact, mesh=self.mesh,
+                mesh_axis=self.mesh_axis,
+                **self.solver_kw.get(prep.kind, {}))
 
     def solve_requests(self, kind: str, payloads: list, *,
                        compact: bool | None = None,
@@ -272,6 +302,7 @@ class SolverEngine:
         """
         from repro.core.refill import RefillSolver
         kw = {**self.solver_kw.get(kind, {}), **overrides}
+        kw.setdefault("tracer", self.tracer)
         return RefillSolver(kind, shape=shape, capacity=capacity,
                             mesh=self.mesh, mesh_axis=self.mesh_axis, **kw)
 

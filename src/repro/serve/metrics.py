@@ -17,6 +17,7 @@ device state.
 from __future__ import annotations
 
 import collections
+import copy
 import threading
 from typing import Any
 
@@ -241,7 +242,12 @@ class SchedulerMetrics:
             return self._dispatches[(kind, driver)]
 
     def snapshot(self) -> dict[str, Any]:
-        """One coherent dict of every counter/gauge/percentile (copies)."""
+        """One coherent dict of every counter/gauge/percentile.
+
+        Returns a DEEP COPY: mutating the returned dict (any nesting
+        level) can never reach live registry state, so operators may
+        post-process snapshots freely (tests/test_obs.py pins this).
+        """
         with self._lock:
             snap = {
                 "queue_depth": self._queue_depth,
@@ -272,7 +278,10 @@ class SchedulerMetrics:
         snap["rounds_ewma"] = {k: self.convergence.rounds(k) for k in kinds}
         snap["heuristics_ewma"] = {
             k: self.convergence.heuristics(k) for k in kinds}
-        return snap
+        # deepcopy is belt-and-braces over the per-field dict() copies
+        # above: it guarantees the deep-isolation contract survives any
+        # future field whose value nests mutable state
+        return copy.deepcopy(snap)
 
 
 def _snapshot_kinds(convergence: ConvergenceStats) -> tuple[str, ...]:

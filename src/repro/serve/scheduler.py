@@ -68,6 +68,7 @@ from repro.core.kinds import get_kind
 from repro.core.refill import refill_runtime
 from repro.core.solver_loop import trace_cycles
 from repro.launch.mesh import scheduler_lanes, shard_count
+from repro.obs.trace import current_tracer
 from repro.serve.engine import SolverEngine, _merge_deprecated_kw
 from repro.serve.metrics import SchedulerMetrics
 
@@ -82,6 +83,7 @@ class _Request:
     future: Future
     submit_t: float
     deadline_t: float
+    queued_t: float = 0.0     # enqueue timestamp (queue-wait span start)
 
 
 @dataclass
@@ -168,6 +170,14 @@ class AsyncSolverEngine:
         with a ``DeprecationWarning``.
       metrics: optional ``SchedulerMetrics`` to record into (one is
         created otherwise; read it via ``.metrics.snapshot()``).
+      tracer: optional ``repro.obs.Tracer`` recording per-ticket
+        lifecycle spans (``submit`` → ``queue-wait`` → ``bucket/pad`` →
+        ``device-solve`` → ``refill-admission`` → ``resolve``, every span
+        tagged ``ticket``/``kind``). Defaults to the AMBIENT tracer at
+        construction (``repro.obs.use_tracer``) — captured once here and
+        handed to the lane engines, because contextvars do not cross into
+        the scheduler/lane threads. ``None`` traces nothing; the hot path
+        then pays one ``None`` check per stage.
 
     Results are bit-identical to ``SolverEngine.flush()`` of the same
     request stream chunked the same way — and, transitively, to a loop of
@@ -183,7 +193,8 @@ class AsyncSolverEngine:
                  solver_kw: dict[str, dict] | None = None,
                  maxflow_kw: dict | None = None,
                  assignment_kw: dict | None = None,
-                 metrics: SchedulerMetrics | None = None):
+                 metrics: SchedulerMetrics | None = None,
+                 tracer=None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if max_delay_ms <= 0:
@@ -199,6 +210,7 @@ class AsyncSolverEngine:
         self.metrics = metrics or SchedulerMetrics(ewma_alpha=ewma_alpha)
         self.refill = bool(refill)
         self._bucket = bucket
+        self.tracer = tracer if tracer is not None else current_tracer()
 
         solver_kw = _merge_deprecated_kw(
             solver_kw, maxflow_kw, assignment_kw, "AsyncSolverEngine")
@@ -208,7 +220,7 @@ class AsyncSolverEngine:
         self._lanes = [
             _Lane(engine=SolverEngine(
                 mesh=lane_mesh, mesh_axis=mesh_axis, bucket=bucket,
-                solver_kw=solver_kw))
+                solver_kw=solver_kw, tracer=self.tracer))
             for lane_mesh in scheduler_lanes(mesh, mesh_axis, n_lanes)]
         self._rr = itertools.cycle(range(len(self._lanes)))
 
@@ -244,6 +256,7 @@ class AsyncSolverEngine:
         the same result the blocking engine's ``flush`` would return for
         this request.
         """
+        t0 = time.monotonic()
         payload = get_kind(kind).validate(payload)
         now = time.monotonic()
         budget = self.max_delay_ms if deadline_ms is None else deadline_ms
@@ -256,11 +269,17 @@ class AsyncSolverEngine:
                     "AsyncSolverEngine is closed; no new submissions")
             req = _Request(ticket=self._next_ticket, kind=kind,
                            payload=payload, future=fut, submit_t=now,
-                           deadline_t=now + budget / 1e3)
+                           deadline_t=now + budget / 1e3,
+                           queued_t=time.monotonic())
             self._next_ticket += 1
             self._pending.setdefault(kind, collections.deque()).append(req)
             self.metrics.record_submit(self._depth_locked())
             self._cond.notify_all()
+        if self.tracer is not None:
+            # submit ends exactly where queue-wait begins (queued_t), so a
+            # ticket's lifecycle spans chain without gaps or overlaps
+            self.tracer.record("submit", t0, req.queued_t,
+                               ticket=req.ticket, kind=kind)
         return fut
 
     def submit_maxflow(self, problem, *,
@@ -352,6 +371,7 @@ class AsyncSolverEngine:
                     now = time.monotonic()
                 batches = self._pop_batches_locked(now)
                 depth = self._depth_locked()
+            t_pop = time.monotonic()
             for kind, reqs, trigger in batches:
                 self.metrics.record_flush(trigger, depth)
                 # drop requests whose future the caller already cancelled
@@ -360,6 +380,11 @@ class AsyncSolverEngine:
                 self.metrics.record_cancelled(len(reqs) - len(live))
                 if not live:
                     continue
+                if self.tracer is not None:
+                    for r in live:
+                        self.tracer.record("queue-wait", r.queued_t, t_pop,
+                                           ticket=r.ticket, kind=kind,
+                                           trigger=trigger)
                 rt = self._refill_rt(kind) if self.refill else None
                 if rt is not None:
                     # continuous batching: one session per bucket shape,
@@ -419,9 +444,19 @@ class AsyncSolverEngine:
                 self.metrics.convergence.spread(kind),
                 len(prep.idxs), threshold=self.spread_threshold,
                 min_batch=self.min_compact_batch, forced=self.dispatch)
+            t_disp = time.monotonic()
             with trace_cycles(self.metrics.record_live_trace):
                 out, stats = lane.engine.solve_prepared(
                     prep, compact=compact)
+            if self.tracer is not None:
+                # per-ticket view of the bucket dispatch (the engine also
+                # records the aggregate device-solve span)
+                t_end = time.monotonic()
+                for i in prep.idxs:
+                    self.tracer.record(
+                        "solve", t_disp, t_end, ticket=reqs[i].ticket,
+                        kind=kind, bucket=list(prep.shape),
+                        driver="compacted" if compact else "masked")
             self.metrics.record_dispatch(
                 kind, compact=compact, spread=stats.spread,
                 occupancy=stats.n_real / self.max_batch,
@@ -432,7 +467,13 @@ class AsyncSolverEngine:
             # metrics BEFORE resolution: a caller waiting on result() may
             # read snapshot() the instant the future resolves
             self.metrics.record_done((now - r.submit_t) * 1e3)
-            r.future.set_result(results[i])
+            if self.tracer is None:
+                r.future.set_result(results[i])
+            else:
+                tr0 = time.monotonic()
+                r.future.set_result(results[i])
+                self.tracer.record("resolve", tr0, time.monotonic(),
+                                   ticket=r.ticket, kind=kind)
 
     def _refill_rt(self, kind: str):
         """The kind's refill runtime, or ``None`` if it serves closed-batch
@@ -482,21 +523,51 @@ class AsyncSolverEngine:
         cap = -(-self.max_batch // sc) * sc
         solver = lane.engine.refill_session(kind, shape=bshape, capacity=cap)
         self.metrics.record_refill_session(kind)
+        # per-request solve-span starts: seeds start with the session, an
+        # admitted request the moment its admission lands
+        t_session = time.monotonic()
+        solve_t0 = {i: t_session for i in range(len(reqs))}
 
         def admit_cb(n_free: int) -> list:
+            t_adm = time.monotonic()
             taken = self._pop_refill(kind, solver, n_free)
             live = [r for r in taken
                     if r.future.set_running_or_notify_cancel()]
             self.metrics.record_cancelled(len(taken) - len(live))
             if live:
                 self.metrics.record_refill_admit(kind, len(live))
+                base = len(reqs)
                 reqs.extend(live)
+                if self.tracer is not None:
+                    t_end = time.monotonic()
+                    for j, r in enumerate(live):
+                        solve_t0[base + j] = t_end
+                        self.tracer.record("queue-wait", r.queued_t, t_adm,
+                                           ticket=r.ticket, kind=kind,
+                                           trigger="refill")
+                    self.tracer.record(
+                        "refill-admission", t_adm, t_end, kind=kind,
+                        n_free=n_free, admitted=len(live),
+                        tickets=[r.ticket for r in live])
+                else:
+                    for j in range(len(live)):
+                        solve_t0[base + j] = t_adm
             return [r.payload for r in live]
 
         def on_result(idx: int, res) -> None:
             r = reqs[idx]
-            self.metrics.record_done((time.monotonic() - r.submit_t) * 1e3)
-            r.future.set_result(res)
+            now = time.monotonic()
+            self.metrics.record_done((now - r.submit_t) * 1e3)
+            if self.tracer is None:
+                r.future.set_result(res)
+            else:
+                self.tracer.record("solve", solve_t0.get(idx, t_session),
+                                   now, ticket=r.ticket, kind=kind,
+                                   bucket=list(bshape), driver="refill")
+                tr0 = time.monotonic()
+                r.future.set_result(res)
+                self.tracer.record("resolve", tr0, time.monotonic(),
+                                   ticket=r.ticket, kind=kind)
 
         def on_error(idx: int, e: Exception) -> None:
             r = reqs[idx]
@@ -524,15 +595,24 @@ class AsyncSolverEngine:
         for r in reqs:
             if r.future.done():          # already resolved before the raise
                 continue
+            t0 = time.monotonic()
             try:
                 [res] = lane.engine.solve_requests(kind, [r.payload])
             except Exception as e:
                 self.metrics.record_done(0.0, ok=False)
                 r.future.set_exception(e)
             else:
-                self.metrics.record_done(
-                    (time.monotonic() - r.submit_t) * 1e3)
-                r.future.set_result(res)
+                now = time.monotonic()
+                self.metrics.record_done((now - r.submit_t) * 1e3)
+                if self.tracer is None:
+                    r.future.set_result(res)
+                else:
+                    self.tracer.record("solve", t0, now, ticket=r.ticket,
+                                       kind=kind, driver="isolated")
+                    tr0 = time.monotonic()
+                    r.future.set_result(res)
+                    self.tracer.record("resolve", tr0, time.monotonic(),
+                                       ticket=r.ticket, kind=kind)
 
     # ---- shutdown --------------------------------------------------------
 
