@@ -512,6 +512,101 @@ def bench_matching(rows, repeats=2):
                  f"xla_us={us_x:.0f};interpret-mode frontier kernel"))
 
 
+@bench("warmstart")
+def bench_warmstart(rows, repeats=2):
+    """Incremental re-solve: cold vs warm-started maxflow on an edit chain.
+
+    A batch of grid instances is solved once, then mutated ``steps`` times
+    (a few terminal-capacity edits per step — the docs/warmstart.md
+    streaming pattern).  Each step is re-solved two ways on the SAME
+    mutated problems:
+
+      * ``warmstart_cold`` — from scratch through ``solve_batch``;
+      * ``warmstart_warm`` — through ``solve_warm`` seeded with the
+        previous step's solution (``WarmStart(sol, base_problem=prev)``).
+
+    Warm and cold flows must bit-match (asserted — this bench doubles as
+    an end-to-end equivalence check).  The headline numbers are the total
+    push-relabel rounds down each chain: warm must spend strictly fewer.
+    Numbers land in benchmarks/RESULTS_warmstart.md
+    (``python -m benchmarks.run warmstart``).
+    """
+    from repro.core.batch import solve_batch
+    from repro.core.kinds import get_kind
+    from repro.core.maxflow.grid import GridProblem
+    from repro.core.maxflow.ref import random_grid_problem
+    from repro.core.warm import WarmStart, solve_warm
+
+    rng = np.random.default_rng(0)
+    kind = get_kind("maxflow")
+    B, hw, steps = 4, 32, 3
+    bases = []
+    for _ in range(B):
+        cap, cs, ct = random_grid_problem(rng, hw, hw, max_cap=20,
+                                          terminal_density=0.3)
+        bases.append(GridProblem(*map(jnp.asarray, (cap, cs, ct))))
+
+    def mutate(p):
+        # sparse terminal edits: the incremental-serving workload shape
+        cs = np.asarray(p.cap_src).copy()
+        ct = np.asarray(p.cap_sink).copy()
+        for arr in (cs, ct):
+            mask = rng.random(arr.shape) < 0.01
+            arr[mask] = np.maximum(
+                arr[mask] + rng.integers(-3, 4, int(mask.sum())), 0)
+        return GridProblem(p.cap_nbr, *map(jnp.asarray, (cs, ct)))
+
+    chains = [[p := b] + [p := mutate(p) for _ in range(steps)]
+              for b in bases]
+
+    def run_cold():
+        rounds = 0
+        res = None
+        for s in range(1, steps + 1):
+            res = solve_batch("maxflow", [c[s] for c in chains])
+            rounds += sum(int(r.rounds) for r in res)
+        return res, rounds
+
+    base_res = solve_batch("maxflow", [c[0] for c in chains])
+
+    def run_warm():
+        # the base solve is shared state both paths already hold; only the
+        # `steps` re-solves are timed, for warm and cold alike
+        prev = base_res
+        rounds = 0
+        res = None
+        for s in range(1, steps + 1):
+            warm = {i: WarmStart(kind.solution_of(prev[i]),
+                                 base_problem=chains[i][s - 1])
+                    for i in range(B)}
+            res = solve_warm("maxflow", [c[s] for c in chains], warm)
+            rounds += sum(int(r.rounds) for r in res)
+            prev = res
+        return res, rounds
+
+    (cold_res, cold_rounds), _ = run_cold(), run_warm()  # compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        cold_res, cold_rounds = run_cold()
+    us_c = (time.perf_counter() - t0) / repeats * 1e6
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        warm_res, warm_rounds = run_warm()
+    us_w = (time.perf_counter() - t0) / repeats * 1e6
+
+    for a, b in zip(cold_res, warm_res):
+        assert float(a.flow) == float(b.flow), "warm != cold optimum"
+    assert warm_rounds < cold_rounds, (warm_rounds, cold_rounds)
+    rows.append(("warmstart_cold", us_c, cold_rounds,
+                 f"B={B};hw={hw};steps={steps};"
+                 f"flow_sum={sum(float(r.flow) for r in cold_res):.0f}"))
+    rows.append(("warmstart_warm", us_w, warm_rounds,
+                 f"rounds_saved={cold_rounds - warm_rounds}"))
+    rows.append(("warmstart_gain", us_c - us_w,
+                 f"rounds_ratio={cold_rounds / max(warm_rounds, 1):.2f}x;"
+                 f"wall_speedup={us_c / us_w:.2f}x"))
+
+
 @bench("refine_ops")
 def bench_refine_ops(rows, repeats=2):
     """Operation-count scaling (the paper analyzes O(n^2 m) op bounds)."""

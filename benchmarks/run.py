@@ -80,6 +80,39 @@ def _check_kind_coverage() -> None:
             f"benchmarks/bench_flow.py")
 
 
+def _check_row(row) -> None:
+    """A bench row must lower cleanly into the CSV schema — fail FAST,
+    naming the offending bench and row, instead of emitting a ragged line
+    that downstream artifact parsing half-reads.
+
+    Accepted shapes: ``(name, us, rounds, derived)`` or the legacy
+    ``(name, us, derived)``; ``name`` a non-empty string without commas
+    or newlines (it is a CSV cell), ``us`` a finite number, ``rounds`` an
+    integer-valued number or ``None``.
+    """
+    def die(why: str):
+        raise SystemExit(f"malformed bench row {row!r}: {why} — every row "
+                         f"must match name,us_per_call,rounds,wall_s,derived")
+    if not isinstance(row, tuple) or len(row) not in (3, 4):
+        die("expected a (name, us, rounds, derived) or (name, us, derived) "
+            "tuple")
+    name, us = row[0], row[1]
+    rounds = row[2] if len(row) == 4 else None
+    if not isinstance(name, str) or not name or "," in name or "\n" in name:
+        die("name must be a non-empty string without commas/newlines")
+    try:
+        us = float(us)
+    except (TypeError, ValueError):
+        die(f"us_per_call {us!r} is not a number")
+    if us != us or us in (float("inf"), float("-inf")):
+        die(f"us_per_call {us!r} is not finite")
+    if rounds is not None:
+        try:
+            int(rounds)
+        except (TypeError, ValueError):
+            die(f"rounds {rounds!r} is not an integer count")
+
+
 def main(argv: list[str] | None = None) -> None:
     parser = argparse.ArgumentParser(
         prog="python -m benchmarks.run",
@@ -124,6 +157,7 @@ def main(argv: list[str] | None = None) -> None:
                 fn(rows, repeats=args.repeats)
     lines = ["name,us_per_call,rounds,wall_s,derived"]
     for row, wall in zip(rows, rows.stamps):
+        _check_row(row)
         if len(row) == 4:
             name, us, rounds, derived = row
             r = "" if rounds is None else str(int(rounds))

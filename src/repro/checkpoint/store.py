@@ -6,17 +6,36 @@ visible to readers). Restore reshards automatically: each leaf is assembled
 from the saved global array and ``jax.device_put`` to the *current* mesh's
 sharding, so restarting with a different topology (elastic scaling after a
 node failure) is a first-class path, not a special case.
+
+Restore VALIDATES each leaf against the manifest's saved ``dtypes`` /
+``shapes`` and against ``like_tree`` before loading anything onto devices:
+a dtype or shape mismatch raises ``ValueError`` naming the leaf, instead
+of silently casting (which used to truncate e.g. float32 checkpoints into
+int32 model trees without a sound).
+
+Beyond step checkpoints, the store doubles as a flat keyed blob store for
+the warm-start solution cache (``repro.core.warm.SolutionCache`` spills
+evicted entries here): ``put(dir, key, tree)`` / ``get(dir, key,
+like_tree=None)`` write ``kv_<key>/`` entries with the same atomic-commit
+and manifest discipline.  ``_gc`` only ever touches ``step_<digits>``
+directories, so kv entries (and any foreign directory a user drops into
+the checkpoint root) survive checkpoint rotation.
 """
 from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+# the only directories save/restore/_gc own; anything else in ckpt_dir
+# (kv_* entries, foreign dirs, loose files) is never GC'd or parsed
+_STEP_RE = re.compile(r"^step_(\d{8,})$")
 
 
 def _flatten(tree):
@@ -26,11 +45,18 @@ def _flatten(tree):
 
 def save(ckpt_dir: str, step: int, tree, *, keep: int = 3) -> str:
     """Blocking save of a (possibly sharded) pytree. Returns the path."""
-    leaves, treedef = _flatten(tree)
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    leaves, _ = _flatten(tree)
+    _write_entry(ckpt_dir, final, leaves, extra_meta={"step": step})
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _write_entry(ckpt_dir: str, final: str, leaves, *, extra_meta=None):
+    """Write leaves + manifest into ``final`` with an atomic commit."""
     proc = jax.process_index()
     os.makedirs(ckpt_dir, exist_ok=True)
-    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=f".tmp_step_{step}_")
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_ckpt_")
     try:
         arrs = {}
         for i, leaf in enumerate(leaves):
@@ -39,23 +65,36 @@ def save(ckpt_dir: str, step: int, tree, *, keep: int = 3) -> str:
         np.savez(os.path.join(tmp, f"shard_{proc}.npz"), **arrs)
         if proc == 0:
             meta = {
-                "step": step,
                 "n_leaves": len(leaves),
-                "dtypes": [str(l.dtype) for l in leaves],
-                "shapes": [list(l.shape) for l in leaves],
+                "dtypes": [str(arrs[f"leaf_{i}"].dtype)
+                           for i in range(len(leaves))],
+                "shapes": [list(arrs[f"leaf_{i}"].shape)
+                           for i in range(len(leaves))],
             }
+            meta.update(extra_meta or {})
             with open(os.path.join(tmp, "manifest.json"), "w") as f:
                 json.dump(meta, f)
-        os.replace(tmp, final)            # atomic commit
+        try:
+            os.replace(tmp, final)        # atomic commit
+        except OSError:
+            # target exists as a non-empty dir (kv overwrite): swap the
+            # old entry aside first so the commit itself stays a single
+            # atomic rename, then drop the displaced entry
+            old = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_old_")
+            os.replace(final, os.path.join(old, "prev"))
+            os.replace(tmp, final)
+            shutil.rmtree(old, ignore_errors=True)
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
-    _gc(ckpt_dir, keep)
     return final
 
 
 def _gc(ckpt_dir: str, keep: int):
-    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    # defensively skip anything that is not a committed step directory:
+    # kv_* blob entries, users' foreign dirs, and in-flight .tmp_* writes
+    # must never be collected by checkpoint rotation.
+    steps = sorted(d for d in os.listdir(ckpt_dir) if _STEP_RE.match(d))
     for d in steps[:-keep]:
         shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
 
@@ -65,10 +104,45 @@ def latest_step(ckpt_dir: str) -> int | None:
         return None
     best = None
     for d in os.listdir(ckpt_dir):
-        if d.startswith("step_") and os.path.exists(
-                os.path.join(ckpt_dir, d, "manifest.json")):
-            best = max(best or -1, int(d.split("_")[1]))
+        m = _STEP_RE.match(d)
+        if m and os.path.exists(os.path.join(ckpt_dir, d, "manifest.json")):
+            best = max(best or -1, int(m.group(1)))
     return best
+
+
+def _load_validated(path: str, like_leaves, meta):
+    """Load shard leaves, validating dtype/shape against manifest + likes.
+
+    ``like_leaves`` may be ``None`` to accept whatever the manifest says
+    (the keyed blob path, where the caller holds the structure).
+    """
+    n = meta["n_leaves"]
+    if like_leaves is not None and len(like_leaves) != n:
+        raise ValueError(
+            f"checkpoint/model mismatch at {path}: checkpoint has {n} "
+            f"leaves, like_tree has {len(like_leaves)}")
+    data = np.load(os.path.join(path, f"shard_{jax.process_index()}.npz"))
+    out = []
+    for i in range(n):
+        arr = data[f"leaf_{i}"]
+        want_dtype, want_shape = meta["dtypes"][i], tuple(meta["shapes"][i])
+        if str(arr.dtype) != want_dtype or arr.shape != want_shape:
+            raise ValueError(
+                f"corrupt checkpoint {path}: leaf {i} is "
+                f"{arr.dtype}{list(arr.shape)} but the manifest recorded "
+                f"{want_dtype}{list(want_shape)}")
+        if like_leaves is not None:
+            like = like_leaves[i]
+            like_dtype = str(np.dtype(like.dtype))
+            like_shape = tuple(np.shape(like))
+            if want_dtype != like_dtype or want_shape != like_shape:
+                raise ValueError(
+                    f"checkpoint/model mismatch at {path}: leaf {i} was "
+                    f"saved as {want_dtype}{list(want_shape)} but like_tree "
+                    f"expects {like_dtype}{list(like_shape)} — refusing to "
+                    f"cast silently")
+        out.append(arr)
+    return out
 
 
 def restore(ckpt_dir: str, step: int, like_tree, shardings=None):
@@ -76,17 +150,58 @@ def restore(ckpt_dir: str, step: int, like_tree, shardings=None):
 
     ``shardings`` may target a different mesh than the checkpoint was saved
     from (elastic restart): arrays are re-placed with jax.device_put.
+    Every leaf's saved dtype and shape must match ``like_tree`` exactly;
+    mismatches raise ``ValueError`` instead of casting.
     """
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
     with open(os.path.join(path, "manifest.json")) as f:
         meta = json.load(f)
     leaves, treedef = _flatten(like_tree)
-    assert len(leaves) == meta["n_leaves"], "checkpoint/model mismatch"
-    data = np.load(os.path.join(path, f"shard_{jax.process_index()}.npz"))
-    out = []
+    arrs = _load_validated(path, leaves, meta)
     sh_leaves = (_flatten(shardings)[0] if shardings is not None
                  else [None] * len(leaves))
-    for i, (like, sh) in enumerate(zip(leaves, sh_leaves)):
-        arr = jnp.asarray(data[f"leaf_{i}"], dtype=like.dtype)
-        out.append(jax.device_put(arr, sh) if sh is not None else arr)
+    out = []
+    for arr, like, sh in zip(arrs, leaves, sh_leaves):
+        a = jnp.asarray(arr, dtype=like.dtype)
+        out.append(jax.device_put(a, sh) if sh is not None else a)
     return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# keyed blob store (kv_* entries) — the SolutionCache spill target
+
+
+def _kv_path(ckpt_dir: str, key: str) -> str:
+    # keys are content hashes ([0-9a-f]); reject anything that could
+    # escape the directory or collide with the step_* namespace
+    if not re.fullmatch(r"[A-Za-z0-9._-]+", key):
+        raise ValueError(f"invalid blob key {key!r}: use [A-Za-z0-9._-]+")
+    return os.path.join(ckpt_dir, f"kv_{key}")
+
+
+def put(ckpt_dir: str, key: str, tree) -> str:
+    """Atomically store a pytree under ``key`` (overwrites). Returns path."""
+    leaves, _ = _flatten(tree)
+    return _write_entry(ckpt_dir, _kv_path(ckpt_dir, key), leaves,
+                        extra_meta={"key": key})
+
+
+def get(ckpt_dir: str, key: str, like_tree=None):
+    """Load the pytree stored under ``key``; ``None`` if absent.
+
+    With ``like_tree`` the result takes its structure (validated leaf by
+    leaf like :func:`restore`); without it, the flat list of numpy leaves
+    is returned and the caller re-attaches its own structure.
+    """
+    path = _kv_path(ckpt_dir, key)
+    manifest = os.path.join(path, "manifest.json")
+    if not os.path.exists(manifest):
+        return None
+    with open(manifest) as f:
+        meta = json.load(f)
+    if like_tree is None:
+        return _load_validated(path, None, meta)
+    leaves, treedef = _flatten(like_tree)
+    arrs = _load_validated(path, leaves, meta)
+    return jax.tree.unflatten(
+        treedef, [jnp.asarray(a, dtype=l.dtype) for a, l in zip(arrs, leaves)])

@@ -315,6 +315,45 @@ def _scale_init(w, *, alpha: int) -> _ScaleState:
                        st=_refine_init(c, eps0, st))
 
 
+def _scale_warm(w, p_y, dmax, *, alpha: int) -> _ScaleState:
+    """Warm flat state: re-enter the ε ladder at a delta-bounded rung with
+    the prior column prices.
+
+    ``_refine_init`` makes the empty flow EXACTLY ε-optimal for ANY
+    ``p_y`` (it reprices every row against the given column prices), so
+    warm correctness is unconditional — the ladder still ends at ε = 1,
+    where 1-optimality on ``(n+1)``-scaled costs is the exact optimum.
+    The prior prices only change how much work is left: a price vector
+    that was 1-optimal for the base costs is ``(1 + D)``-optimal for the
+    mutated costs, ``D = max |Δc|`` in scaled units, so the ladder can
+    start at ``min(1 + D, ε_cold)`` instead of ``ceil(max|c|/α)`` and a
+    small delta skips almost every rung.  ``dmax`` is the per-instance
+    ``D`` (callers overestimate it freely; it is clamped to the cold ε).
+    """
+    w_i = jnp.asarray(w, jnp.int32)
+    n = w_i.shape[-1]
+    batch = w_i.shape[:-2]
+    c = -(n + 1) * w_i
+    C = jnp.maximum(jnp.max(jnp.abs(c), axis=(-2, -1)), 1)
+    eps_cold = jnp.maximum(1, -(-C // alpha))
+    eps0 = jnp.clip(1 + jnp.asarray(dmax, jnp.int32), 1, eps_cold)
+    st = _RefineState(
+        F=jnp.zeros(batch + (n, n), jnp.int32),
+        p_x=jnp.zeros(batch + (n,), jnp.int32),
+        p_y=jnp.asarray(p_y, jnp.int32),
+        fixed=jnp.zeros(batch + (n, n), jnp.bool_),
+        rounds=jnp.zeros(batch, jnp.int32),
+        pushes=jnp.zeros(batch, jnp.int32),
+        relabels=jnp.zeros(batch, jnp.int32),
+    )
+    return _ScaleState(c=c, eps=eps0, k=jnp.zeros(batch, jnp.int32),
+                       alive=jnp.ones(batch, jnp.bool_),
+                       st=_refine_init(c, eps0, st))
+
+
+_scale_warm_jit = jax.jit(_scale_warm, static_argnames=("alpha",))
+
+
 @functools.lru_cache(maxsize=None)
 def _assignment_spec(method: str, alpha: int, max_rounds: int,
                      rounds_per_heuristic: int, use_price_update: bool,

@@ -236,6 +236,7 @@ def solve_batch(
     mesh=None,
     mesh_axis: str | None = None,
     stats_out: list | None = None,
+    warm: dict | None = None,
     **solver_kw,
 ) -> list:
     """Solve many (possibly ragged) instances of one registered kind.
@@ -259,6 +260,11 @@ def solve_batch(
       stats_out: optional list; one ``BucketStats`` per dispatched bucket
         is appended (occupancy + round-spread telemetry for the serving
         scheduler's adaptive dispatch).
+      warm: optional ``{payload_position: repro.core.warm.WarmStart}`` —
+        those instances are warm-started from their cached prior solutions
+        through the kind's ``warm_state`` hook, mixed into the same
+        buckets as the cold instances (``repro.core.warm.solve_warm``
+        drives the dispatch; docs/warmstart.md).
       **solver_kw: forwarded to the kind's solver (``backend=``,
         ``max_rounds=``, ...).
     """
@@ -266,6 +272,11 @@ def solve_batch(
     k = get_kind(kind)
     if not payloads:
         return []
+    if warm:
+        from repro.core.warm import solve_warm
+        return solve_warm(kind, payloads, warm, bucket=bucket,
+                          compact=compact, mesh=mesh, mesh_axis=mesh_axis,
+                          stats_out=stats_out, **solver_kw)
     results: list = [None] * len(payloads)
     for prep in k.prepare_buckets(payloads, bucket=bucket, mesh=mesh,
                                   mesh_axis=mesh_axis):
@@ -726,6 +737,102 @@ def _assignment_loop_spec(*, method: str = "auction", alpha: int = 10,
                             use_price_update, use_arc_fixing, backend)
 
 
+# ------------------------------------------------------ warm-start hooks
+# (repro.core.warm drives these; see docs/warmstart.md)
+
+
+def _pad_trailing(a, shape, fill=0):
+    """Zero-pad the trailing ``len(shape)`` axes of ``a`` up to ``shape``."""
+    a = jnp.asarray(a)
+    tail = a.shape[a.ndim - len(shape):]
+    pads = [(0, 0)] * (a.ndim - len(shape)) + [
+        (0, t - s) for s, t in zip(tail, shape)]
+    return jnp.pad(a, pads, constant_values=fill)
+
+
+def _maxflow_init_state(**solver_kw):
+    """Cold per-instance init for the ``"maxflow"`` kind — the refill
+    runtime's init, registered so warm/cold mixing shares one code path."""
+    return _maxflow_refill(**solver_kw).init
+
+
+def _maxflow_warm_state(*, rounds_per_heuristic: int = 32,
+                        max_rounds: int = 100_000, bfs_max_iters: int = 0,
+                        backend: str = "xla", stall_threshold: float = 0.05):
+    """Warm per-instance init: recover the prior flow from the cached
+    residuals, clamp/repair it against the mutated capacities, and re-BFS
+    the heights (``repro.core.maxflow.grid._grid_warm``).  Without a base
+    problem the prior flow is unrecoverable from residuals alone, so the
+    hook degrades to the cold init."""
+    from repro.core.maxflow.grid import _grid_init_jit, _grid_warm_jit
+
+    def warm1(problem1: GridProblem, solution, *, base_problem1=None,
+              delta_bound=None):
+        cap = jnp.moveaxis(jnp.asarray(problem1.cap_nbr), 1, 0)
+        cs = jnp.asarray(problem1.cap_src)
+        ct = jnp.asarray(problem1.cap_sink)
+        if base_problem1 is None:
+            return _grid_init_jit(cap, cs, ct, bfs_max_iters=bfs_max_iters)
+        H, W = cs.shape[-2:]
+        bcap = jnp.moveaxis(jnp.asarray(base_problem1.cap_nbr), 1, 0)
+        bct = jnp.asarray(base_problem1.cap_sink)
+        # cached solution arrays are at the ORIGINAL (h, w); inert padding
+        # carries no flow, so zero-extending them to the bucket is exact
+        pcap = _pad_trailing(solution["cap"], (H, W))[:, None]
+        pct = _pad_trailing(solution["cap_sink"], (H, W))[None]
+        return _grid_warm_jit(cap, cs, ct, bcap, bct, pcap, pct,
+                              bfs_max_iters=bfs_max_iters)
+
+    return warm1
+
+
+def _maxflow_solution_of(res: GridFlowResult):
+    """Cacheable artifact: the residual capacities (grid + sink edges) —
+    with the base problem they reconstruct the full prior flow."""
+    return {"cap": res.state.cap, "cap_sink": res.state.cap_sink}
+
+
+def _assignment_init_state(**solver_kw):
+    return _assignment_refill(**solver_kw).init
+
+
+def _assignment_warm_state(*, method: str = "auction", alpha: int = 10,
+                           max_rounds: int = 200_000,
+                           rounds_per_heuristic: int = 16,
+                           use_price_update: bool = True,
+                           use_arc_fixing: bool = True,
+                           backend: str = "xla"):
+    """Warm per-instance init: re-enter the ε ladder at a delta-bounded
+    rung with the prior column prices (``_scale_warm``; unconditionally
+    correct for ANY prices — see its docstring).  ``delta_bound`` (max
+    |Δw| on the original weights) turns into a scaled-cost bound of
+    ``(m+1)·2·Δw`` — the factor 2 covers the bonus shift drifting with
+    ``min(w)``; with no bound the ladder re-enters at the cold rung and
+    only the prices carry over."""
+    from repro.core.assignment.cost_scaling import _scale_warm_jit
+
+    def warm1(stacked1, solution, *, base_problem1=None, delta_bound=None):
+        w = jnp.asarray(stacked1, jnp.int32)
+        m = int(w.shape[-1])
+        p_y = jnp.asarray(solution["p_y"], jnp.int32)
+        p_y = jnp.pad(p_y, (0, m - p_y.shape[-1]))[None]
+        if delta_bound is None:
+            dmax = jnp.full((1,), 2 ** 30, jnp.int32)    # clamps to cold ε
+        else:
+            dmax = jnp.full(
+                (1,), min(2 ** 30, (m + 1) * 2 * int(np.ceil(delta_bound))),
+                jnp.int32)
+        return _scale_warm_jit(w, p_y, dmax, alpha=alpha)
+
+    return warm1
+
+
+def _assignment_solution_of(res: AssignmentResult):
+    """Cacheable artifact: the column prices (the dual half the warm
+    ladder reuses)."""
+    return {"p_y": res.p_y}
+
+
 register_kind(SolverKind(
     name="maxflow",
     validate=validate_grid_problem,
@@ -734,6 +841,9 @@ register_kind(SolverKind(
     solve_prepared=solve_prepared_maxflow,
     loop_spec=_maxflow_loop_spec,
     refill=_maxflow_refill,
+    init_state=_maxflow_init_state,
+    warm_state=_maxflow_warm_state,
+    solution_of=_maxflow_solution_of,
 ))
 
 register_kind(SolverKind(
@@ -744,4 +854,7 @@ register_kind(SolverKind(
     solve_prepared=solve_prepared_assignment,
     loop_spec=_assignment_loop_spec,
     refill=_assignment_refill,
+    init_state=_assignment_init_state,
+    warm_state=_assignment_warm_state,
+    solution_of=_assignment_solution_of,
 ))

@@ -37,6 +37,27 @@ A ``SolverKind`` bundles:
   boundaries.  Kinds without one still serve through the closed-batch
   path everywhere.
 
+Three further OPTIONAL hooks form the warm-start seam (``repro.core.warm``
+drives them; all three builtin kinds register all three):
+
+* ``init_state(**static_kw) -> (problem1) -> state1`` — the kind's COLD
+  init, extracted from inside the solver and registered: builds the loop
+  state for one padded batch-1 stacked problem.  The same init the solver
+  uses internally, so per-instance cold init inside a mixed warm/cold
+  batch bit-matches the closed-batch path.
+* ``warm_state(**static_kw) -> (problem1, solution, base_problem1=,
+  delta_bound=) -> state1`` — rebuild a VALID loop state for the (possibly
+  delta-mutated) ``problem1`` from a previously cached ``solution``:
+  clamp the prior preflow to the new capacities and repair deficits while
+  keeping heights valid lower bounds (maxflow); re-enter the ε-ladder at
+  a delta-bounded rung with the prior prices (assignment); keep the still-
+  valid matched pairs and re-run augmenting rounds (matching).  The warm
+  state must drive the UNCHANGED loop to the same optimum a cold solve of
+  the mutated problem reaches.
+* ``solution_of(result) -> solution`` — extract the cacheable artifact
+  (the thing ``warm_state`` consumes) from one cropped per-instance
+  result; ``repro.core.warm.SolutionCache`` stores and spills these.
+
 This module imports neither jax nor the solver packages at import time —
 the registry stays importable from anywhere (``repro.serve.metrics``
 included) without touching device state.  The built-in kinds register
@@ -64,6 +85,13 @@ class SolverKind(NamedTuple):
     # optional: the kind's continuous-batching runtime factory
     # (repro.core.refill.RefillRuntime); None = closed-batch only
     refill: Callable[..., Any] | None = None
+    # optional warm-start seam (repro.core.warm); None = cold-only kind.
+    # init_state / warm_state are factories over the kind's static solver
+    # knobs returning per-instance (batch-1) state builders; solution_of
+    # maps one cropped result to its cacheable artifact.
+    init_state: Callable[..., Any] | None = None
+    warm_state: Callable[..., Any] | None = None
+    solution_of: Callable[[Any], Any] | None = None
 
 
 _REGISTRY: dict[str, SolverKind] = {}

@@ -223,6 +223,35 @@ def _matching_refill(*, max_rounds: int = 10_000, greedy_init: bool = True,
                          finalize=finalize, crop=crop, shape_of=shape_of)
 
 
+def _matching_init_state(**solver_kw):
+    """Cold per-instance init — the refill runtime's init, registered on
+    the warm seam so mixed warm/cold batches share one code path."""
+    return _matching_refill(**solver_kw).init
+
+
+def _matching_warm_state(*, max_rounds: int = 10_000,
+                         greedy_init: bool = True, backend: str = "xla"):
+    """Warm per-instance init: seed the state with the prior matched pairs
+    that survive the mutated adjacency and let the augmenting phases
+    restore maximality (``repro.core.matching.bfs._match_warm``)."""
+    from repro.core.matching.bfs import _match_warm_jit
+
+    def warm1(stacked1, solution, *, base_problem1=None, delta_bound=None):
+        adj = jnp.asarray(stacked1, jnp.bool_)
+        mr = jnp.asarray(solution["match_row"], jnp.int32)
+        mr = jnp.pad(mr, (0, adj.shape[-2] - mr.shape[-1]),
+                     constant_values=-1)[None]
+        return _match_warm_jit(adj, mr, greedy_init=greedy_init)
+
+    return warm1
+
+
+def _matching_solution_of(res: MatchingResult):
+    """Cacheable artifact: the matched forest's row side (the column side
+    is rebuilt from it at warm time)."""
+    return {"match_row": res.match_row}
+
+
 register_kind(SolverKind(
     name="matching",
     validate=validate_matching_problem,
@@ -231,4 +260,7 @@ register_kind(SolverKind(
     solve_prepared=solve_prepared_matching,
     loop_spec=_matching_loop_spec,
     refill=_matching_refill,
+    init_state=_matching_init_state,
+    warm_state=_matching_warm_state,
+    solution_of=_matching_solution_of,
 ))

@@ -226,6 +226,47 @@ def _match_init(adj, *, greedy_init: bool) -> MatchState:
                       progress=_has_free_work(adj, mr))
 
 
+def _match_warm(adj, mr_prior, *, greedy_init: bool) -> MatchState:
+    """Warm state: keep the prior matched pairs that survive the new
+    adjacency, then let the unchanged augmenting phases restore maximality.
+
+    Any valid matching is a sound starting forest for BFS augmentation
+    (Berge: a matching is maximum iff no augmenting path exists — the
+    phases find and apply exactly those paths), and maximum CARDINALITY is
+    unique, so a warm solve lands on the same optimum as a cold one.  The
+    prior pairs are scrubbed against the new adjacency (an edge deleted by
+    the delta unmatches both endpoints) and re-checked for mutual
+    consistency, so even a stale or foreign cache entry degrades to a
+    smaller-but-valid seed rather than an invalid state.  ``greedy_init``
+    additionally extends the seed with the phase-0 greedy pass (it only
+    proposes free-row/free-col pairs, so the kept pairs are untouched).
+    """
+    adj = jnp.asarray(adj, jnp.bool_)
+    *batch, nl, nr = adj.shape
+    rows_i = jnp.arange(nl, dtype=jnp.int32)
+    cols_i = jnp.arange(nr, dtype=jnp.int32)
+    mr = jnp.asarray(mr_prior, jnp.int32)
+    # a pair survives only if its edge still exists
+    edge = jnp.take_along_axis(
+        adj, jnp.maximum(mr, 0)[..., :, None], axis=-1)[..., 0]
+    mr = jnp.where((mr >= 0) & (mr < nr) & edge, mr, -1)
+    # rebuild the column side from the row side (mutual consistency even if
+    # the cached pair list was inconsistent); ties keep the minimum row
+    hit = mr[..., :, None] == cols_i
+    mc = jnp.min(jnp.where(hit, rows_i[..., :, None], INF), axis=-2)
+    mc = jnp.where(mc < INF, mc, -1)
+    # and scrub rows that lost the tie so (mr, mc) is a matching
+    back = jnp.take_along_axis(mc, jnp.maximum(mr, 0), axis=-1)
+    mr = jnp.where((mr >= 0) & (back == rows_i), mr, -1)
+    if greedy_init:
+        mr, mc = _greedy_match(adj, mr, mc)
+    return MatchState(adj=adj, match_row=mr, match_col=mc,
+                      progress=_has_free_work(adj, mr))
+
+
+_match_warm_jit = jax.jit(_match_warm, static_argnames=("greedy_init",))
+
+
 def _match_finalize(state: MatchState, rounds) -> MatchingResult:
     """Result view: ``converged`` is the Berge certificate — the last phase
     found no augmenting path (False only when ``max_rounds`` was hit)."""

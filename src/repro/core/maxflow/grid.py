@@ -461,6 +461,102 @@ _grid_finalize_jit = jax.jit(_grid_finalize,
                              static_argnames=("bfs_max_iters",))
 
 
+def _grid_warm(cap0, cs0, ct0, base_cap, base_ct, prior_cap, prior_ct,
+               *, bfs_max_iters: int) -> GridFlowState:
+    """Warm restart (arXiv 2511.01235 §3): clamp the prior flow to the new
+    capacities, repair conservation deficits, re-BFS the heights.
+
+    Internal layout throughout (``cap*`` ``(4, ..., H, W)``, rest
+    ``(..., H, W)``).  ``base_*`` are the capacities the prior solve ran
+    against; the prior NET flow per grid arc is recovered from its residuals
+    as ``base_cap - prior_cap`` and per sink edge as ``base_ct - prior_ct``.
+    The restart invariant (Baumstark et al., arXiv 1507.01926) is that the
+    height function stays a valid lower bound on residual sink distance —
+    guaranteed here by recomputing exact BFS heights against the repaired
+    residual graph.  (Fresh zero gap memory, not the prior heights: exact
+    distances plus a uniform ``N`` on the unreachable region can never
+    contain a violating edge, whereas prior heights carried across a
+    capacity delta can — the no-violations witness stays unconditional.)
+
+    Repair: clamping to shrunken capacities can leave nodes with negative
+    excess (more outflow than inflow).  A Jacobi fixpoint loop lets every
+    deficit node cut its own outgoing flow (sink edge first, then the grid
+    directions) until conservation holds with ``e >= 0`` everywhere; flows
+    only ever decrease, so the loop terminates.  Any instance still in
+    deficit at the iteration cap (unreachable for integral capacities, but
+    cheap to guard) falls back to its cold init, keeping warm-vs-cold
+    equivalence unconditional.
+    """
+    *b, H, W = cs0.shape
+    n_nodes = jnp.int32(H * W + 2)
+    bfs_iters = bfs_max_iters or (H * W + 2)
+    capn = cap0.astype(jnp.float32)
+    csn = cs0.astype(jnp.float32)
+    ctn = ct0.astype(jnp.float32)
+
+    # prior positive flow per arc, clamped to the new capacities
+    f = base_cap.astype(jnp.float32) - prior_cap.astype(jnp.float32)
+    phi = jnp.minimum(jnp.maximum(f, 0.0), capn)
+    fs = jnp.clip(base_ct.astype(jnp.float32) - prior_ct.astype(jnp.float32),
+                  0.0, ctn)
+
+    def excess(phi, fs):
+        # source saturates (cold-init convention): inflow from s is csn
+        inflow = sum(_move(phi[d], d) for d in range(4))
+        return csn + inflow - jnp.sum(phi, axis=0) - fs
+
+    def body(carry):
+        phi, fs, e, it = carry
+        deficit = jnp.maximum(-e, 0.0)
+        r = jnp.minimum(deficit, fs)
+        fs = fs - r
+        deficit = deficit - r
+        rows = []
+        for d in range(4):
+            r = jnp.minimum(deficit, phi[d])
+            rows.append(phi[d] - r)
+            deficit = deficit - r
+        phi = jnp.stack(rows, 0)
+        return phi, fs, excess(phi, fs), it + 1
+
+    def cond(carry):
+        _, _, e, it = carry
+        return jnp.any(e < 0) & (it < jnp.int32(4 * H * W + 8))
+
+    phi, fs, e, _ = jax.lax.while_loop(
+        cond, body, (phi, fs, excess(phi, fs), jnp.int32(0)))
+
+    resid = jnp.stack(
+        [capn[d] - phi[d] + _move(phi[_OPP[d]], _OPP[d]) for d in range(4)], 0)
+    cap_sink = ctn - fs
+    warm = GridFlowState(
+        e=jnp.maximum(e, 0.0),
+        h=bfs_heights(resid, cap_sink, jnp.zeros(csn.shape, jnp.int32),
+                      n_nodes, bfs_iters),
+        cap=resid,
+        cap_src=csn,                       # residual x -> s after saturation
+        cap_sink=cap_sink,
+        sink_flow=_gsum(fs),
+        src_flow=jnp.zeros(tuple(b), jnp.float32),
+        heur=jnp.zeros(tuple(b), jnp.int32),
+    )
+    bad = jnp.any(e < 0, axis=(-2, -1))    # per-instance repair failure
+    cold = _grid_init(cap0, cs0, ct0, bfs_max_iters=bfs_max_iters)
+
+    def pick(w, c):
+        extra = w.ndim - bad.ndim          # trailing (H, W) / leading (4,)
+        mask = bad
+        if w.ndim - len(b) == 3:           # cap leaf: leading direction axis
+            mask = bad[None]
+            extra -= 1
+        return jnp.where(mask.reshape(mask.shape + (1,) * extra), c, w)
+
+    return jax.tree.map(pick, warm, cold)
+
+
+_grid_warm_jit = jax.jit(_grid_warm, static_argnames=("bfs_max_iters",))
+
+
 def _grid_batch_compact(cap0, cs0, ct0, *, rounds_per_heuristic, max_rounds,
                         bfs_max_iters, backend, stall_threshold=0.05,
                         lanes=None) -> GridFlowResult:

@@ -125,10 +125,24 @@ class RefillSolver:
         self.shape = tuple(int(s) for s in shape)
         self.capacity = int(capacity)
         self.tracer = tracer
+        self._solver_kw = dict(solver_kw)
+        self._warm_fn = None
         self._lanes = None
         if mesh is not None:
             from repro.launch.mesh import compact_lanes
             self._lanes = compact_lanes(mesh, mesh_axis, self.capacity)
+
+    def _warm_state1(self, problem1, payload, ws):
+        """Warm per-instance state through the kind's warm seam."""
+        from repro.core.warm import build_warm_state
+        if self.kind.warm_state is None:
+            raise ValueError(
+                f"solver kind {self.kind.name!r} registered no warm_state "
+                f"hook; warm admissions need one (docs/warmstart.md)")
+        if self._warm_fn is None:
+            self._warm_fn = self.kind.warm_state(**self._solver_kw)
+        return build_warm_state(self.kind, self.rt, self._warm_fn, problem1,
+                                payload, ws, self.shape)
 
     def fits(self, payload) -> bool:
         """Does a (validated) payload fit this session's bucket shape?"""
@@ -138,7 +152,8 @@ class RefillSolver:
 
     def run(self, initial, *, admit: Callable | None = None,
             on_result: Callable | None = None,
-            on_error: Callable | None = None) -> dict[int, Any]:
+            on_error: Callable | None = None,
+            warm: dict | None = None) -> dict[int, Any]:
         """Drive one session to quiescence; returns ``{request_index: result}``.
 
         Request indices count every payload the session saw, in arrival
@@ -153,7 +168,10 @@ class RefillSolver:
           admit: optional ``admit(n_free) -> payloads`` callback, called at
             every cycle boundary with free slots; must return at most
             ``n_free`` payloads (``[]``/``None`` declines — the session
-            ends when nothing is live and ``admit`` declines).
+            ends when nothing is live and ``admit`` declines).  Each item
+            may be a bare payload or a ``(payload,
+            repro.core.warm.WarmStart)`` pair — the pair form admits the
+            instance warm-started from its cached prior solution.
           on_result: optional ``on_result(request_index, result)`` — called
             the moment that request's instance converges (NOT at session
             drain); results are bit-identical to the request's solo solve.
@@ -162,12 +180,22 @@ class RefillSolver:
             finalize/crop raises, fails ALONE and the session continues.
             Without ``on_error`` such failures propagate and abort the
             session.
+          warm: optional ``{seed_position: WarmStart}`` for the ``initial``
+            payloads (positions index ``initial``); warm and cold seeds
+            mix in one session via per-slot init.
         """
+        from repro.core.warm import WarmStart, _concat_states
         rt, cap, shape = self.rt, self.capacity, self.shape
         initial = list(initial)
+        warm = dict(warm or {})
         if len(initial) > cap:
             raise ValueError(
                 f"{len(initial)} initial payloads > capacity {cap}")
+        for pos in warm:
+            if not 0 <= pos < len(initial):
+                raise ValueError(
+                    f"warm position {pos} out of range for "
+                    f"{len(initial)} initial payloads")
 
         results: dict[int, Any] = {}
         req_of_token: dict[int, int] = {}
@@ -205,19 +233,36 @@ class RefillSolver:
             return idx
 
         # seed slots: initial payloads first, inert fill for the rest
+        warmstarts: dict[int, Any] = {}     # request idx -> WarmStart
         stacked1, slot = [], 0
-        for payload in initial:
+        for pos, payload in enumerate(initial):
             idx = _intake(payload)
             if idx is None:
                 continue
             req_of_token[slot] = idx       # initial tokens are slot indices
+            if pos in warm:
+                warmstarts[idx] = warm[pos]
             stacked1.append(problems[idx])
             slot += 1
         for _ in range(cap - slot):
             inert = self.kind.inert_problem(shape)
             stacked1.append(jax.tree.map(
                 lambda a: jnp.asarray(a)[None], inert))
-        state = rt.init(_concat_problems(stacked1))
+        if warmstarts:
+            # mixed warm/cold seeding: per-slot init, concatenated along
+            # each leaf's batch axis (cold slots keep the fused-init
+            # trajectory — init is per-instance pure)
+            states1 = []
+            for token, p1 in enumerate(stacked1):
+                idx = req_of_token.get(token)
+                if idx in warmstarts:
+                    states1.append(self._warm_state1(
+                        p1, metas[idx][1], warmstarts[idx]))
+                else:
+                    states1.append(rt.init(p1))
+            state = _concat_states(rt.spec, states1)
+        else:
+            state = rt.init(_concat_problems(stacked1))
 
         session = self
 
@@ -238,12 +283,20 @@ class RefillSolver:
                             f"payloads; it must return at most n_free")
                     if not payloads:           # a genuine decline
                         break
-                    for payload in payloads:
-                        idx = _intake(payload)
+                    for item in payloads:
+                        ws = None
+                        if (isinstance(item, tuple) and len(item) == 2
+                                and isinstance(item[1], WarmStart)):
+                            item, ws = item
+                        idx = _intake(item)
                         if idx is None:
                             continue
                         try:
-                            st1 = rt.init(problems[idx])
+                            if ws is not None:
+                                st1 = session._warm_state1(
+                                    problems[idx], metas[idx][1], ws)
+                            else:
+                                st1 = rt.init(problems[idx])
                         except Exception as e:
                             _error(idx, e)
                             continue

@@ -119,6 +119,29 @@ def _r_refill(w: _Writer, v: dict) -> None:
                       "cycles."), v["utilization"])
 
 
+def _r_warm(w: _Writer, v: dict) -> None:
+    n = w.family("warm_cache_lookups_total", "counter",
+                 "Solution-cache lookups on the warm-start path, by "
+                 "result (hit/miss).")
+    w.sample(n, v["cache_hits"], {"result": "hit"})
+    w.sample(n, v["cache_misses"], {"result": "miss"})
+    w.sample(w.family("warm_cache_hit_rate", "gauge",
+                      "Fraction of solution-cache lookups that hit."),
+             v["cache_hit_rate"])
+    n = w.family("warm_solves_total", "counter",
+                 "Solver instances dispatched, by init mode (warm/cold).")
+    w.sample(n, v["warm_solves"], {"init": "warm"})
+    w.sample(n, v["cold_solves"], {"init": "cold"})
+    w.sample(w.family("warm_fraction", "gauge",
+                      "Fraction of dispatched instances that were "
+                      "warm-started."), v["warm_fraction"])
+    n = w.family("warm_rounds_saved_ewma", "gauge",
+                 "EWMA of solver rounds saved per warm solve vs the "
+                 "kind's cold baseline, by kind.")
+    for kind, val in sorted(v["rounds_saved_ewma"].items()):
+        w.sample(n, val, {"kind": kind})
+
+
 def _per_kind_ewma(name: str, help_: str):
     def render(w: _Writer, v: dict) -> None:
         n = w.family(name, "gauge", help_)
@@ -137,6 +160,7 @@ _RENDERERS = {
     "compact_cycles": _r_compact_cycles,
     "compact_live_mean": _r_compact_live_mean,
     "refill": _r_refill,
+    "warm": _r_warm,
     "spread_ewma": _per_kind_ewma(
         "spread_ewma", "EWMA of per-bucket convergence spread, by kind "
         "(the adaptive-dispatch signal)."),

@@ -140,6 +140,15 @@ class SolverEngine:
         not cross the threads a scheduler may drive this engine from);
         ``None`` (no ambient tracer) records nothing and costs one
         ``None`` check per stage.
+      cache: optional ``repro.core.warm.SolutionCache`` backing the
+        incremental re-solve path (``submit(..., base=, delta=)``, see
+        docs/warmstart.md). Defaults to a private per-engine cache;
+        pass a shared one to pool solutions across engines. Every solved
+        request of a kind with a registered ``solution_of`` hook is
+        cached, so any prior ticket can seed a warm re-solve.
+      metrics: optional ``repro.serve.metrics.SchedulerMetrics`` — the
+        engine records cache lookups and warm/cold solve composition into
+        it (the async scheduler threads its own through here).
     """
 
     def __init__(self, *, mesh=None, mesh_axis: str | None = None,
@@ -147,10 +156,13 @@ class SolverEngine:
                  solver_kw: dict[str, dict] | None = None,
                  maxflow_kw: dict | None = None,
                  assignment_kw: dict | None = None,
-                 tracer=None):
+                 tracer=None, cache=None, metrics=None):
+        from repro.core.warm import SolutionCache
         self.mesh, self.mesh_axis, self.bucket = mesh, mesh_axis, bucket
         self.compact = compact
         self.tracer = tracer if tracer is not None else current_tracer()
+        self.cache = cache if cache is not None else SolutionCache()
+        self.metrics = metrics
         self.solver_kw = _merge_deprecated_kw(
             solver_kw, maxflow_kw, assignment_kw, "SolverEngine")
         self._next_ticket = 0
@@ -160,26 +172,84 @@ class SolverEngine:
         self._queues: dict[str, list[tuple[int, Any]]] = {}
         # results of kinds that completed before a later kind's flush raised
         self._ready: dict[int, Any] = {}
+        # ticket -> (kind, cache key) for every solved request whose kind
+        # registered a solution_of hook — lets submit(base=ticket) resolve
+        self._key_of_ticket: dict[int, tuple[str, str]] = {}
+        # ticket -> WarmStart for queued warm requests
+        self._warm_of_ticket: dict[int, Any] = {}
 
     def _ticket(self) -> int:
         t, self._next_ticket = self._next_ticket, self._next_ticket + 1
         return t
 
-    def submit(self, kind: str, payload) -> int:
+    def _resolve_base(self, kind: str, base):
+        """``submit(base=)`` -> ``(base_problem, solution)`` or raise.
+
+        ``base`` is a prior ticket of this engine (int) or a
+        ``SolutionCache`` content key (str). Records the lookup hit/miss;
+        a miss raises ``KeyError`` — warm submission demands its seed, the
+        caller falls back to a plain cold ``submit`` explicitly.
+        """
+        if isinstance(base, int):
+            mapped = self._key_of_ticket.get(base)
+            if mapped is None or mapped[0] != kind:
+                if self.metrics is not None:
+                    self.metrics.record_cache_lookup(False)
+                raise KeyError(
+                    f"base ticket {base} has no cached {kind!r} solution "
+                    f"(unsolved, evicted, or a different kind)")
+            base = mapped[1]
+        hit = self.cache.get(base)
+        if self.metrics is not None:
+            self.metrics.record_cache_lookup(hit is not None)
+        if hit is None:
+            raise KeyError(
+                f"no cached solution under key {base!r} (evicted?)")
+        return hit.problem, hit.solution
+
+    def submit(self, kind: str, payload=None, *, base=None, delta=None) -> int:
         """Queue one request of a registered kind; returns its ticket.
 
         Malformed payloads are rejected HERE, by the kind's registered
         validator, BEFORE a ticket is issued — so ``flush`` cannot be
         wedged by a bad queue entry. Unknown kinds raise ``ValueError``
         naming the registered ones.
+
+        Incremental re-solve (docs/warmstart.md): pass ``base=`` — a prior
+        ticket of this engine or a ``SolutionCache`` key — to warm-start
+        from that solved instance. ``delta`` (a ``GraphDelta`` or sequence)
+        then derives the new payload from the base problem when ``payload``
+        is ``None``; an explicit ``payload`` with ``base=`` warm-starts
+        that payload directly. A ``base`` with no cached solution raises
+        ``KeyError`` (the caller retries cold).
         """
         t0 = time.monotonic() if self.tracer is not None else 0.0
+        ws = None
+        if base is not None:
+            from repro.core.warm import WarmStart, apply_delta
+            bp, solution = self._resolve_base(kind, base)
+            if payload is None:
+                if delta is None:
+                    raise ValueError(
+                        "submit(base=...) needs a payload or a delta to "
+                        "derive one")
+                payload = apply_delta(kind, bp, delta)
+            elif delta is not None:
+                payload = apply_delta(kind, payload, delta)
+            ws = WarmStart(solution, base_problem=bp)
+        elif delta is not None:
+            raise ValueError("submit(delta=...) needs base= to apply it to")
+        elif payload is None:
+            raise ValueError("submit() needs a payload (or base=/delta=)")
         payload = get_kind(kind).validate(payload)
         t = self._ticket()
         self._queues.setdefault(kind, []).append((t, payload))
+        if ws is not None:
+            self._warm_of_ticket[t] = ws
         if self.tracer is not None:
             self.tracer.record("submit", t0, time.monotonic(),
-                               ticket=t, kind=kind)
+                               ticket=t, kind=kind,
+                               init="warm" if ws is not None else "cold")
         return t
 
     def submit_maxflow(self, problem) -> int:
@@ -236,7 +306,8 @@ class SolverEngine:
         driver = "compacted" if compact else "masked"
         with self.tracer.span("device-solve", kind=prep.kind,
                               bucket=list(prep.shape),
-                              n_real=len(prep.idxs), driver=driver), \
+                              n_real=len(prep.idxs), driver=driver,
+                              init="cold"), \
                 step_annotation(f"solve:{prep.kind}"):
             return get_kind(prep.kind).solve_prepared(
                 prep, compact=compact, mesh=self.mesh,
@@ -245,13 +316,31 @@ class SolverEngine:
 
     def solve_requests(self, kind: str, payloads: list, *,
                        compact: bool | None = None,
-                       stats_out: list | None = None) -> list:
+                       stats_out: list | None = None,
+                       warm: dict | None = None) -> list:
         """Solve ``payloads`` of one kind; results in input order.
 
         ``prepare`` + ``solve_prepared`` composed back-to-back — the
         blocking path ``flush`` uses, and the poison-isolation fallback of
-        the async scheduler (one payload at a time).
+        the async scheduler (one payload at a time). A non-empty ``warm``
+        (``{payload_position: WarmStart}``) routes the whole batch through
+        the per-instance warm/cold seam (``repro.core.warm.solve_warm``)
+        instead — results stay in input order and reach the same optima
+        (tests/test_warm.py).
         """
+        if warm:
+            from repro.core.warm import solve_warm
+            compact = self.compact if compact is None else compact
+            kw = dict(bucket=self.bucket, compact=compact, mesh=self.mesh,
+                      mesh_axis=self.mesh_axis, stats_out=stats_out,
+                      **self.solver_kw.get(kind, {}))
+            if self.tracer is None:
+                return solve_warm(kind, payloads, warm, **kw)
+            with self.tracer.span("device-solve", kind=kind,
+                                  n_real=len(payloads),
+                                  n_warm=len(warm), init="warm"), \
+                    step_annotation(f"solve:{kind}"):
+                return solve_warm(kind, payloads, warm, **kw)
         results = [None] * len(payloads)
         for prep in self.prepare(kind, payloads):
             out, stats = self.solve_prepared(prep, compact=compact)
@@ -279,9 +368,14 @@ class SolverEngine:
             if not q:
                 continue
             tickets, payloads = zip(*q)
+            warm_map = {i: self._warm_of_ticket[t]
+                        for i, t in enumerate(tickets)
+                        if t in self._warm_of_ticket}
             res = self.solve_requests(kind, list(payloads),
-                                      stats_out=stats_out)
+                                      stats_out=stats_out, warm=warm_map)
             self._ready.update(zip(tickets, res))
+            self.record_solved(kind, tickets, payloads, res,
+                               warm_idx=tuple(warm_map))
             # Drop exactly the entries this flush solved — NOT q.clear():
             # a submit that lands while solve_requests is running (e.g.
             # from a callback or another thread) appends behind the
@@ -289,6 +383,38 @@ class SolverEngine:
             del q[:len(tickets)]
         out, self._ready = dict(sorted(self._ready.items())), {}
         return out
+
+    def record_solved(self, kind: str, tickets, payloads, results, *,
+                      warm_idx=()) -> None:
+        """Post-solve bookkeeping for one kind's batch (flush and the
+        async scheduler both route through here).
+
+        Caches every result's solution artifact (kinds with a
+        ``solution_of`` hook) so any solved ticket can seed a later
+        ``submit(base=ticket)``, drops the tickets' pending warm seeds,
+        and records the batch's warm/cold composition — including the
+        rounds-saved signal when the kind has a cold-rounds EWMA baseline
+        (``SchedulerMetrics.record_warm``).
+        """
+        k = get_kind(kind)
+        for t, p, r in zip(tickets, payloads, results):
+            self._warm_of_ticket.pop(t, None)
+            if r is None or k.solution_of is None:
+                continue
+            key = self.cache.put(kind, p, k.solution_of(r))
+            self._key_of_ticket[t] = (kind, key)
+        if self.metrics is None or not tickets:
+            return
+        n_warm = len(warm_idx)
+        rounds_saved = None
+        cold_ewma = self.metrics.convergence.rounds(kind)
+        warm_rounds = [float(results[i].rounds) for i in warm_idx
+                       if results[i] is not None
+                       and getattr(results[i], "rounds", None) is not None]
+        if cold_ewma is not None and warm_rounds:
+            rounds_saved = cold_ewma - sum(warm_rounds) / len(warm_rounds)
+        self.metrics.record_warm(kind, n_warm, len(tickets) - n_warm,
+                                 rounds_saved)
 
     def refill_session(self, kind: str, *, shape, capacity: int,
                        **overrides):

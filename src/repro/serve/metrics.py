@@ -156,6 +156,12 @@ class SchedulerMetrics:
     requests admitted mid-solve per kind, a per-kind slot-occupancy EWMA
     sampled every refill cycle, and the steady-state batch utilization
     (mean live/capacity across all refill cycles).
+
+    Warm starts (``warm`` snapshot key): solution-cache lookups (hits /
+    misses / hit rate), warm-vs-cold solve counts and the warm fraction,
+    and a per-kind EWMA of rounds saved per warm solve relative to the
+    kind's cold-rounds baseline (``rounds_saved_ewma`` — fed by the
+    scheduler and engines through ``record_warm``; see docs/warmstart.md).
     """
 
     def __init__(self, *, latency_window: int = 1024, ewma_alpha: float = 0.25):
@@ -174,6 +180,9 @@ class SchedulerMetrics:
         self._refill_cycles = 0
         self._refill_occ_total = 0.0
         self._refill_occ_ewma: dict[str, Ewma] = {}
+        self._cache_lookups = collections.Counter()   # "hit" / "miss"
+        self._warm_solves = collections.Counter()     # "warm" / "cold"
+        self._rounds_saved_ewma: dict[str, Ewma] = {}
 
     # ---- recording hooks (submit path / scheduler / lanes) --------------
 
@@ -235,6 +244,27 @@ class SchedulerMetrics:
             self._refill_occ_ewma.setdefault(
                 kind, Ewma(self._ewma_alpha)).update(occupancy)
 
+    def record_cache_lookup(self, hit: bool) -> None:
+        """One solution-cache lookup on the warm-start path (hit or miss)."""
+        with self._lock:
+            self._cache_lookups["hit" if hit else "miss"] += 1
+
+    def record_warm(self, kind: str, n_warm: int, n_cold: int,
+                    rounds_saved: float | None = None) -> None:
+        """Warm/cold composition of one dispatch, plus the rounds saved.
+
+        ``rounds_saved`` is (cold-rounds EWMA of the kind) minus (this
+        dispatch's mean warm rounds) — positive when warm starts converge
+        in fewer rounds than the kind's recent cold baseline. Callers feed
+        it only when both sides exist; the EWMA smooths per-dispatch noise.
+        """
+        with self._lock:
+            self._warm_solves["warm"] += int(n_warm)
+            self._warm_solves["cold"] += int(n_cold)
+            if rounds_saved is not None:
+                self._rounds_saved_ewma.setdefault(
+                    kind, Ewma(self._ewma_alpha)).update(rounds_saved)
+
     # ---- reading --------------------------------------------------------
 
     def dispatch_count(self, kind: str, driver: str) -> int:
@@ -269,6 +299,23 @@ class SchedulerMetrics:
                     "utilization": (
                         self._refill_occ_total / self._refill_cycles
                         if self._refill_cycles else None),
+                },
+                "warm": {
+                    "cache_hits": self._cache_lookups["hit"],
+                    "cache_misses": self._cache_lookups["miss"],
+                    "cache_hit_rate": (
+                        self._cache_lookups["hit"]
+                        / sum(self._cache_lookups.values())
+                        if self._cache_lookups else None),
+                    "warm_solves": self._warm_solves["warm"],
+                    "cold_solves": self._warm_solves["cold"],
+                    "warm_fraction": (
+                        self._warm_solves["warm"]
+                        / sum(self._warm_solves.values())
+                        if sum(self._warm_solves.values()) else None),
+                    "rounds_saved_ewma": {
+                        k: e.value
+                        for k, e in self._rounds_saved_ewma.items()},
                 },
             }
         kinds = _snapshot_kinds(self.convergence)

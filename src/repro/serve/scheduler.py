@@ -84,6 +84,7 @@ class _Request:
     submit_t: float
     deadline_t: float
     queued_t: float = 0.0     # enqueue timestamp (queue-wait span start)
+    warm: Any = None          # WarmStart seed (submit(base=/delta=)) or None
 
 
 @dataclass
@@ -194,7 +195,7 @@ class AsyncSolverEngine:
                  maxflow_kw: dict | None = None,
                  assignment_kw: dict | None = None,
                  metrics: SchedulerMetrics | None = None,
-                 tracer=None):
+                 tracer=None, cache=None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if max_delay_ms <= 0:
@@ -215,12 +216,20 @@ class AsyncSolverEngine:
         solver_kw = _merge_deprecated_kw(
             solver_kw, maxflow_kw, assignment_kw, "AsyncSolverEngine")
         self._solver_kw = solver_kw
+        # ONE solution cache shared across every lane engine — warm
+        # submissions must find solutions regardless of which lane solved
+        # the base request (SolutionCache is thread-safe)
+        from repro.core.warm import SolutionCache
+        self._cache = cache if cache is not None else SolutionCache()
+        # scheduler ticket -> (kind, cache key) of its cached solution
+        self._key_of_ticket: dict[int, tuple[str, str]] = {}
         # kind -> RefillRuntime | None (None = closed-batch only), lazy
         self._refill_rts: dict[str, Any] = {}
         self._lanes = [
             _Lane(engine=SolverEngine(
                 mesh=lane_mesh, mesh_axis=mesh_axis, bucket=bucket,
-                solver_kw=solver_kw, tracer=self.tracer))
+                solver_kw=solver_kw, tracer=self.tracer,
+                cache=self._cache))
             for lane_mesh in scheduler_lanes(mesh, mesh_axis, n_lanes)]
         self._rr = itertools.cycle(range(len(self._lanes)))
 
@@ -246,8 +255,42 @@ class AsyncSolverEngine:
 
     # ---- submission ------------------------------------------------------
 
-    def submit(self, kind: str, payload, *,
-               deadline_ms: float | None = None) -> Future:
+    def _resolve_base(self, kind: str, base):
+        """``submit(base=)`` -> ``(base_problem, solution)`` or ``KeyError``.
+
+        ``base`` is a prior ticket of THIS scheduler (int) or a
+        ``SolutionCache`` content key (str); the lookup hit/miss is
+        recorded (``warm`` metrics key).
+        """
+        if isinstance(base, int):
+            with self._lock:
+                mapped = self._key_of_ticket.get(base)
+            if mapped is None or mapped[0] != kind:
+                self.metrics.record_cache_lookup(False)
+                raise KeyError(
+                    f"base ticket {base} has no cached {kind!r} solution "
+                    f"(unsolved, evicted, or a different kind)")
+            base = mapped[1]
+        hit = self._cache.get(base)
+        self.metrics.record_cache_lookup(hit is not None)
+        if hit is None:
+            raise KeyError(
+                f"no cached solution under key {base!r} (evicted?)")
+        return hit.problem, hit.solution
+
+    def _cache_result(self, kind: str, req: "_Request", res) -> None:
+        """Cache a resolved request's solution so its ticket can seed a
+        later ``submit(base=ticket)`` (kinds with a ``solution_of`` hook)."""
+        k = get_kind(kind)
+        if res is None or k.solution_of is None:
+            return
+        key = self._cache.put(kind, req.payload, k.solution_of(res))
+        with self._lock:
+            self._key_of_ticket[req.ticket] = (kind, key)
+
+    def submit(self, kind: str, payload=None, *,
+               deadline_ms: float | None = None,
+               base=None, delta=None) -> Future:
         """Queue one request of a registered kind; returns a Future.
 
         Validation happens HERE, synchronously, via the kind's registered
@@ -255,8 +298,34 @@ class AsyncSolverEngine:
         ``ValueError`` and no future is created. ``future.result()`` is
         the same result the blocking engine's ``flush`` would return for
         this request.
+
+        Incremental re-solve (docs/warmstart.md): ``base=`` — a prior
+        ticket of this scheduler or a ``SolutionCache`` key — warm-starts
+        from that solved instance; ``delta`` (a ``GraphDelta`` or
+        sequence) derives the new payload from the base problem when
+        ``payload`` is ``None``. A ``base`` with no cached solution
+        raises ``KeyError`` synchronously (retry with a cold submit).
+        Warm requests batch, refill, and fail-isolate exactly like cold
+        ones; they reach the same optima (tests/test_warm.py).
         """
         t0 = time.monotonic()
+        ws = None
+        if base is not None:
+            from repro.core.warm import WarmStart, apply_delta
+            bp, solution = self._resolve_base(kind, base)
+            if payload is None:
+                if delta is None:
+                    raise ValueError(
+                        "submit(base=...) needs a payload or a delta to "
+                        "derive one")
+                payload = apply_delta(kind, bp, delta)
+            elif delta is not None:
+                payload = apply_delta(kind, payload, delta)
+            ws = WarmStart(solution, base_problem=bp)
+        elif delta is not None:
+            raise ValueError("submit(delta=...) needs base= to apply it to")
+        elif payload is None:
+            raise ValueError("submit() needs a payload (or base=/delta=)")
         payload = get_kind(kind).validate(payload)
         now = time.monotonic()
         budget = self.max_delay_ms if deadline_ms is None else deadline_ms
@@ -270,7 +339,7 @@ class AsyncSolverEngine:
             req = _Request(ticket=self._next_ticket, kind=kind,
                            payload=payload, future=fut, submit_t=now,
                            deadline_t=now + budget / 1e3,
-                           queued_t=time.monotonic())
+                           queued_t=time.monotonic(), warm=ws)
             self._next_ticket += 1
             self._pending.setdefault(kind, collections.deque()).append(req)
             self.metrics.record_submit(self._depth_locked())
@@ -279,7 +348,8 @@ class AsyncSolverEngine:
             # submit ends exactly where queue-wait begins (queued_t), so a
             # ticket's lifecycle spans chain without gaps or overlaps
             self.tracer.record("submit", t0, req.queued_t,
-                               ticket=req.ticket, kind=kind)
+                               ticket=req.ticket, kind=kind,
+                               init="warm" if ws is not None else "cold")
         return fut
 
     def submit_maxflow(self, problem, *,
@@ -389,10 +459,19 @@ class AsyncSolverEngine:
                 if rt is not None:
                     # continuous batching: one session per bucket shape,
                     # admission happens inside the lane at cycle boundaries
+                    # (warm seeds/admissions ride through the session's
+                    # warm= / (payload, WarmStart) forms)
                     for bshape, group in _refill_groups(
                             rt, self._bucket, live):
                         lane = self._lanes[next(self._rr)]
                         lane.work.put(("refill", kind, group, bshape))
+                    continue
+                if any(r.warm is not None for r in live):
+                    # warm-seeded batches build per-instance states, so
+                    # they skip the shared prepare stage and route whole
+                    # through the warm seam (repro.core.warm.solve_warm)
+                    lane = self._lanes[next(self._rr)]
+                    lane.work.put(("warm", kind, live, None))
                     continue
                 lane = self._lanes[next(self._rr)]
                 try:
@@ -423,6 +502,8 @@ class AsyncSolverEngine:
                     # session admits, so the fallback below covers every
                     # request the session ever owned
                     self._solve_refill(lane, kind, reqs, extra)
+                elif tag == "warm":
+                    self._solve_warm_batch(lane, kind, reqs)
                 else:
                     self._solve_batch(lane, kind, reqs, extra)
             except Exception:
@@ -456,20 +537,75 @@ class AsyncSolverEngine:
                     self.tracer.record(
                         "solve", t_disp, t_end, ticket=reqs[i].ticket,
                         kind=kind, bucket=list(prep.shape),
-                        driver="compacted" if compact else "masked")
+                        driver="compacted" if compact else "masked",
+                        init="cold")
             self.metrics.record_dispatch(
                 kind, compact=compact, spread=stats.spread,
                 occupancy=stats.n_real / self.max_batch,
                 rounds=stats.rounds_mean, heuristics=stats.heur_mean)
             results.update(out)
+        # cold solves count into the warm-fraction denominator too
+        self.metrics.record_warm(kind, 0, len(reqs))
         now = time.monotonic()
         for i, r in enumerate(reqs):
+            self._cache_result(kind, r, results[i])
             # metrics BEFORE resolution: a caller waiting on result() may
             # read snapshot() the instant the future resolves
             self.metrics.record_done((now - r.submit_t) * 1e3)
             if self.tracer is None:
                 r.future.set_result(results[i])
             else:
+                tr0 = time.monotonic()
+                r.future.set_result(results[i])
+                self.tracer.record("resolve", tr0, time.monotonic(),
+                                   ticket=r.ticket, kind=kind)
+
+    def _solve_warm_batch(self, lane: _Lane, kind: str,
+                          reqs: list[_Request]) -> None:
+        """One warm-seeded (possibly mixed warm/cold) closed batch.
+
+        Routes through ``SolverEngine.solve_requests(warm=)`` — the
+        per-instance warm/cold init seam — instead of the two-stage
+        prepare/solve pipeline. Warm instances' rounds are kept OUT of the
+        kind's cold-rounds EWMA (they would drag the baseline down and
+        corrupt the rounds-saved signal); the dispatch is recorded with
+        ``rounds=None`` and the warm composition goes through
+        ``record_warm`` instead.
+        """
+        warm = {i: r.warm for i, r in enumerate(reqs) if r.warm is not None}
+        compact = choose_driver(
+            self.metrics.convergence.spread(kind), len(reqs),
+            threshold=self.spread_threshold,
+            min_batch=self.min_compact_batch, forced=self.dispatch)
+        stats_out: list = []
+        t_disp = time.monotonic()
+        results = lane.engine.solve_requests(
+            kind, [r.payload for r in reqs], compact=compact,
+            stats_out=stats_out, warm=warm)
+        t_end = time.monotonic()
+        for stats in stats_out:
+            self.metrics.record_dispatch(
+                kind, compact=stats.compact, spread=stats.spread,
+                occupancy=stats.n_real / self.max_batch, rounds=None)
+        cold_ewma = self.metrics.convergence.rounds(kind)
+        warm_rounds = [float(results[i].rounds) for i in warm
+                       if results[i] is not None
+                       and getattr(results[i], "rounds", None) is not None]
+        rounds_saved = (cold_ewma - sum(warm_rounds) / len(warm_rounds)
+                        if cold_ewma is not None and warm_rounds else None)
+        self.metrics.record_warm(kind, len(warm), len(reqs) - len(warm),
+                                 rounds_saved)
+        now = time.monotonic()
+        for i, r in enumerate(reqs):
+            self._cache_result(kind, r, results[i])
+            self.metrics.record_done((now - r.submit_t) * 1e3)
+            if self.tracer is None:
+                r.future.set_result(results[i])
+            else:
+                self.tracer.record(
+                    "solve", t_disp, t_end, ticket=r.ticket, kind=kind,
+                    driver="compacted" if compact else "masked",
+                    init="warm" if i in warm else "cold")
                 tr0 = time.monotonic()
                 r.future.set_result(results[i])
                 self.tracer.record("resolve", tr0, time.monotonic(),
@@ -552,10 +688,12 @@ class AsyncSolverEngine:
                 else:
                     for j in range(len(live)):
                         solve_t0[base + j] = t_adm
-            return [r.payload for r in live]
+            return [r.payload if r.warm is None else (r.payload, r.warm)
+                    for r in live]
 
         def on_result(idx: int, res) -> None:
             r = reqs[idx]
+            self._cache_result(kind, r, res)
             now = time.monotonic()
             self.metrics.record_done((now - r.submit_t) * 1e3)
             if self.tracer is None:
@@ -563,7 +701,9 @@ class AsyncSolverEngine:
             else:
                 self.tracer.record("solve", solve_t0.get(idx, t_session),
                                    now, ticket=r.ticket, kind=kind,
-                                   bucket=list(bshape), driver="refill")
+                                   bucket=list(bshape), driver="refill",
+                                   init="warm" if r.warm is not None
+                                   else "cold")
                 tr0 = time.monotonic()
                 r.future.set_result(res)
                 self.tracer.record("resolve", tr0, time.monotonic(),
@@ -579,9 +719,14 @@ class AsyncSolverEngine:
             self.metrics.record_refill_cycle(kind, n_live / cap)
 
         seeds = [r.payload for r in list(reqs)]
+        warm_seed = {i: r.warm for i, r in enumerate(reqs)
+                     if r.warm is not None}
         with trace_cycles(trace):
             solver.run(seeds, admit=admit_cb, on_result=on_result,
-                       on_error=on_error)
+                       on_error=on_error, warm=warm_seed or None)
+        n_warm = sum(1 for r in reqs if r.warm is not None)
+        if reqs:
+            self.metrics.record_warm(kind, n_warm, len(reqs) - n_warm)
 
     def _isolate_failures(self, lane: _Lane, kind: str,
                           reqs: list[_Request]) -> None:
@@ -597,11 +742,16 @@ class AsyncSolverEngine:
                 continue
             t0 = time.monotonic()
             try:
-                [res] = lane.engine.solve_requests(kind, [r.payload])
+                [res] = lane.engine.solve_requests(
+                    kind, [r.payload],
+                    warm={0: r.warm} if r.warm is not None else None)
             except Exception as e:
                 self.metrics.record_done(0.0, ok=False)
                 r.future.set_exception(e)
             else:
+                self._cache_result(kind, r, res)
+                self.metrics.record_warm(
+                    kind, int(r.warm is not None), int(r.warm is None))
                 now = time.monotonic()
                 self.metrics.record_done((now - r.submit_t) * 1e3)
                 if self.tracer is None:

@@ -1,0 +1,197 @@
+"""Checkpoint store contracts: atomicity, GC namespacing, validated restore.
+
+The store (``repro.checkpoint.store``) promises:
+
+* ATOMIC COMMIT — a checkpoint becomes visible all-at-once (tempdir +
+  ``os.replace``, manifest written last); readers never observe a torn
+  write, and a crashed writer leaves only an invisible ``.tmp_*`` dir.
+* NAMESPACED GC — ``save(keep=)`` rotation touches ONLY committed
+  ``step_<digits>`` directories: ``kv_*`` blob entries (the warm-start
+  cache's spill target, docs/warmstart.md) and foreign directories a user
+  drops into the checkpoint root survive every rotation.
+* VALIDATED RESTORE — a leaf whose saved dtype/shape disagrees with
+  ``like_tree`` (or with the checkpoint's own manifest) raises
+  ``ValueError`` naming the leaf instead of silently casting.
+* ELASTIC RESHARD — ``restore(shardings=)`` may target a different mesh
+  than the save ran on; values are unchanged (exercised at 2 emulated
+  devices here, at 8 via the subprocess relaunch / the CI flag).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+
+N_DEV = len(jax.devices())
+FORCE_FLAG = "--xla_force_host_platform_device_count=8"
+multi = pytest.mark.skipif(
+    N_DEV < 2, reason="needs >=2 devices; covered via the subprocess test")
+
+
+def _tree():
+    return {"w": jnp.arange(24.0, dtype=jnp.float32).reshape(4, 6),
+            "opt": {"mu": jnp.ones((4, 6), jnp.float32),
+                    "count": jnp.int32(3)}}
+
+
+# ------------------------------------------------------- atomic commit
+
+
+def test_commit_is_atomic_and_manifest_marks_completion(tmp_path):
+    store.save(str(tmp_path), 1, _tree())
+    path = tmp_path / "step_00000001"
+    assert (path / "manifest.json").exists()
+    # no tempdir residue after a successful commit
+    assert not [d for d in os.listdir(tmp_path) if d.startswith(".tmp_")]
+    # a torn write (dir without manifest) is INVISIBLE to latest_step
+    os.makedirs(tmp_path / "step_00000002")
+    assert store.latest_step(str(tmp_path)) == 1
+    # ... and an in-flight tempdir is too
+    os.makedirs(tmp_path / ".tmp_ckpt_inflight")
+    assert store.latest_step(str(tmp_path)) == 1
+
+
+def test_failed_write_leaves_no_tempdir(tmp_path):
+    class Boom:
+        """A leaf whose materialization raises mid-write."""
+        dtype = np.float32
+        def __array__(self, *a, **k):
+            raise RuntimeError("device fell over")
+
+    with pytest.raises(RuntimeError, match="device fell over"):
+        store.save(str(tmp_path), 5, {"x": Boom()})
+    assert not [d for d in os.listdir(tmp_path) if d.startswith(".tmp_")]
+    assert store.latest_step(str(tmp_path)) is None
+
+
+# ------------------------------------------------------- GC namespacing
+
+
+def test_gc_keeps_newest_in_step_order(tmp_path):
+    tree = {"x": jnp.zeros((2,))}
+    # out-of-order saves: GC must order by STEP NUMBER, not mtime
+    for s in (3, 1, 4, 0, 2):
+        store.save(str(tmp_path), s, tree, keep=2)
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert kept == ["step_00000003", "step_00000004"]
+
+
+def test_gc_skips_kv_and_foreign_dirs(tmp_path):
+    store.put(str(tmp_path), "deadbeef", [np.arange(3)])
+    os.makedirs(tmp_path / "users_notes")
+    (tmp_path / "users_notes" / "todo.txt").write_text("keep me")
+    (tmp_path / "loose_file").write_text("me too")
+    tree = {"x": jnp.zeros((2,))}
+    for s in range(4):
+        store.save(str(tmp_path), s, tree, keep=1)
+    names = set(os.listdir(tmp_path))
+    assert "kv_deadbeef" in names
+    assert "users_notes" in names and "loose_file" in names
+    assert [d for d in names if d.startswith("step_")] == ["step_00000003"]
+    got = store.get(str(tmp_path), "deadbeef")
+    np.testing.assert_array_equal(got[0], np.arange(3))
+
+
+def test_latest_step_ignores_foreign_dirs(tmp_path):
+    store.save(str(tmp_path), 7, {"x": jnp.zeros((2,))})
+    os.makedirs(tmp_path / "step_notanumber")
+    os.makedirs(tmp_path / "stepping_stone")
+    os.makedirs(tmp_path / "kv_abc123")
+    assert store.latest_step(str(tmp_path)) == 7
+    assert store.latest_step(str(tmp_path / "does_not_exist")) is None
+
+
+# ------------------------------------------------------- validated restore
+
+
+def test_restore_rejects_dtype_mismatch(tmp_path):
+    store.save(str(tmp_path), 1, _tree())
+    wrong = jax.tree.map(lambda a: jnp.asarray(a, jnp.int32), _tree())
+    with pytest.raises(ValueError, match="refusing to cast"):
+        store.restore(str(tmp_path), 1, wrong)
+
+
+def test_restore_rejects_shape_mismatch(tmp_path):
+    store.save(str(tmp_path), 1, _tree())
+    wrong = _tree()
+    wrong["w"] = jnp.zeros((6, 4), jnp.float32)
+    with pytest.raises(ValueError, match="mismatch"):
+        store.restore(str(tmp_path), 1, wrong)
+
+
+def test_restore_rejects_leaf_count_mismatch(tmp_path):
+    store.save(str(tmp_path), 1, _tree())
+    with pytest.raises(ValueError, match="leaves"):
+        store.restore(str(tmp_path), 1, {"only": jnp.zeros((2,))})
+
+
+def test_restore_rejects_corrupt_shard(tmp_path):
+    store.save(str(tmp_path), 1, _tree())
+    path = tmp_path / "step_00000001"
+    # tamper: manifest claims a different shape than the shard holds
+    meta = json.loads((path / "manifest.json").read_text())
+    meta["shapes"][0] = [9, 9]
+    (path / "manifest.json").write_text(json.dumps(meta))
+    with pytest.raises(ValueError, match="corrupt checkpoint|mismatch"):
+        store.restore(str(tmp_path), 1, _tree())
+
+
+def test_kv_roundtrip_and_key_validation(tmp_path):
+    tree = {"sol": jnp.arange(5.0), "meta": jnp.int32(2)}
+    store.put(str(tmp_path), "cafe.01-x", tree)
+    back = store.get(str(tmp_path), "cafe.01-x", like_tree=tree)
+    np.testing.assert_array_equal(np.asarray(back["sol"]), np.arange(5.0))
+    assert store.get(str(tmp_path), "absent") is None
+    with pytest.raises(ValueError, match="invalid blob key"):
+        store.put(str(tmp_path), "../escape", tree)
+    # overwrite is atomic and last-write-wins
+    store.put(str(tmp_path), "cafe.01-x",
+              jax.tree.map(lambda a: a + 1, tree))
+    back = store.get(str(tmp_path), "cafe.01-x", like_tree=tree)
+    np.testing.assert_array_equal(np.asarray(back["sol"]),
+                                  np.arange(5.0) + 1)
+
+
+# ------------------------------------------------------- elastic reshard
+
+
+@multi
+def test_elastic_reshard_restore_two_devices(tmp_path):
+    """Save unsharded, restore onto a 2-device mesh — values unchanged."""
+    from jax.sharding import NamedSharding
+    from repro.launch.mesh import batch_spec, make_solver_mesh
+
+    tree = {"a": jnp.arange(32.0).reshape(8, 4),
+            "b": jnp.arange(8, dtype=jnp.int32)}
+    store.save(str(tmp_path), 3, tree)
+    mesh = make_solver_mesh(2)
+    shardings = jax.tree.map(
+        lambda _: NamedSharding(mesh, batch_spec(mesh)), tree)
+    back = store.restore(str(tmp_path), 3, tree, shardings=shardings)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(tree[k]), err_msg=k)
+        assert len(back[k].sharding.device_set) == 2, k
+
+
+@pytest.mark.slow  # fresh 8-device process re-runs this whole file
+@pytest.mark.skipif(N_DEV >= 2, reason="already multi-device")
+def test_forced_multi_device_subprocess():
+    root = pathlib.Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " " + FORCE_FLAG).strip()
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "-x", "-q", str(__file__)],
+        cwd=root, env=env, capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, f"\n--- stdout ---\n{r.stdout}\n{r.stderr}"
+    assert "passed" in r.stdout

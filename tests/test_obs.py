@@ -590,6 +590,7 @@ FAMILY_OF = {
     "compact_cycles": "repro_compact_cycles_total",
     "compact_live_mean": "repro_compact_live_mean",
     "refill": "repro_refill_sessions_total",
+    "warm": "repro_warm_cache_lookups_total",
     "spread_ewma": "repro_spread_ewma",
     "occupancy_ewma": "repro_occupancy_ewma",
     "rounds_ewma": "repro_rounds_ewma",
@@ -608,6 +609,9 @@ def _populated_metrics() -> SchedulerMetrics:
     m.record_refill_session("maxflow")
     m.record_refill_admit("maxflow", 3)
     m.record_refill_cycle("maxflow", 0.5)
+    m.record_cache_lookup(True)
+    m.record_cache_lookup(False)
+    m.record_warm("maxflow", 2, 6, rounds_saved=3.0)
     return m
 
 
@@ -628,6 +632,10 @@ def test_prometheus_renders_every_snapshot_field():
         in text
     assert 'repro_ticket_latency_ms{quantile="0.5"} 12.5' in text
     assert 'repro_refill_admitted_total{kind="maxflow"} 3' in text
+    assert 'repro_warm_cache_lookups_total{result="hit"} 1' in text
+    assert 'repro_warm_solves_total{init="warm"} 2' in text
+    assert 'repro_warm_fraction 0.25' in text
+    assert 'repro_warm_rounds_saved_ewma{kind="maxflow"} 3' in text
     assert text.endswith("\n")
 
 

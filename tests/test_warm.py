@@ -1,0 +1,433 @@
+"""Incremental re-solve: warm-start seams, graph deltas, solution cache.
+
+The warm seam's CORRECTNESS CONTRACT (docs/warmstart.md): a warm solve of
+a mutated problem reaches exactly the optimum a cold solve of the same
+mutated problem reaches —
+
+* maxflow: the warm flow VALUE bit-matches the cold one, and the warm
+  trajectory never violates the push-relabel height invariant
+  (``check_no_violations``);
+* assignment: warm re-enters the ε-scaling ladder with the cached prices
+  and lands on the same optimal weight;
+* matching: the surviving matched pairs seed the augmenting rounds and
+  warm cardinality equals Hopcroft–Karp's;
+
+and the seam is DRIVER-INDEPENDENT: masked, compacted, refill, and
+mesh-sharded dispatches of the same warm batch agree (the per-instance
+init is the only thing warm changes — the loop drivers are untouched).
+
+Random delta sequences chain solves (each step warm-starts from the
+previous solution) so staleness compounds the way a serving stream would
+compound it; hypothesis widens the delta space when installed and the
+fixed-seed sweep stands in when it is not.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.core.batch import GridProblem, solve_batch
+from repro.core.kinds import get_kind
+from repro.core.maxflow.grid import check_no_violations
+from repro.core.maxflow.ref import maxflow_grid_ref, random_grid_problem
+from repro.core.assignment.ref import optimal_weight
+from repro.core.matching.ref import hopcroft_karp, random_bipartite
+from repro.core.refill import RefillSolver
+from repro.core.warm import (GraphDelta, SolutionCache, WarmStart,
+                             apply_delta, content_key, delta_bound,
+                             solve_warm)
+
+pytestmark = pytest.mark.warm
+
+N_DEV = len(jax.devices())
+FORCE_FLAG = "--xla_force_host_platform_device_count=8"
+multi = pytest.mark.skipif(
+    N_DEV < 2, reason="needs >=2 devices; covered via the subprocess test")
+
+
+def _grid(rng, H=6, W=7):
+    return GridProblem(*map(jnp.asarray, random_grid_problem(rng, H, W)))
+
+
+def _mf_ref(p) -> int:
+    return maxflow_grid_ref(np.asarray(p.cap_nbr), np.asarray(p.cap_src),
+                            np.asarray(p.cap_sink))
+
+
+def _mutate_grid(rng, p, n_edits=4) -> GridProblem:
+    """Random capacity delta: bump interior arcs up/down, scale terminals."""
+    cap = np.asarray(p.cap_nbr).copy()
+    H, W = cap.shape[-2:]
+    for _ in range(n_edits):
+        d, y, x = rng.integers(4), rng.integers(H), rng.integers(W)
+        if cap[d, y, x] > 0:      # keep off-grid arcs at zero (well-formed)
+            cap[d, y, x] = max(0.0, cap[d, y, x] + rng.integers(-4, 5))
+    ct = np.maximum(np.asarray(p.cap_sink)
+                    + rng.integers(-2, 3, (H, W)), 0.0)
+    return GridProblem(jnp.asarray(cap, jnp.float32), p.cap_src,
+                       jnp.asarray(ct, jnp.float32))
+
+
+def _mutate_w(rng, w, n_edits=3):
+    w2 = np.asarray(w).copy()
+    n = w2.shape[0]
+    for _ in range(n_edits):
+        i, j = rng.integers(n), rng.integers(n)
+        w2[i, j] = max(0, w2[i, j] + rng.integers(-3, 4))
+    return w2
+
+
+def _mutate_adj(rng, adj, n_edits=4):
+    a = np.asarray(adj).copy()
+    nl, nr = a.shape
+    for _ in range(n_edits):
+        a[rng.integers(nl), rng.integers(nr)] ^= True
+    return a
+
+
+# ------------------------------------------------- per-kind equivalence
+
+
+def test_maxflow_warm_equals_cold_over_delta_sequence():
+    """Chained deltas: each step warm-starts from the previous solution and
+    must bit-match the cold flow of its own mutated graph."""
+    rng = np.random.default_rng(0)
+    kind = get_kind("maxflow")
+    p = _grid(rng)
+    sol, base = None, None
+    for step in range(5):
+        if step:
+            p = _mutate_grid(rng, base)
+        warm = {0: WarmStart(sol, base_problem=base)} if sol else None
+        res = (solve_warm("maxflow", [p], warm)[0] if warm
+               else solve_batch("maxflow", [p])[0])
+        cold = solve_batch("maxflow", [p])[0]
+        ref = _mf_ref(p)
+        assert float(res.flow) == float(cold.flow), step
+        assert abs(float(res.flow) - ref) < 1e-4, step
+        assert bool(check_no_violations(res.state)), step
+        sol, base = kind.solution_of(res), p
+
+
+def test_assignment_warm_equals_cold_over_delta_sequence():
+    rng = np.random.default_rng(1)
+    kind = get_kind("assignment")
+    w = rng.integers(0, 20, (6, 6)).astype(np.int32)
+    sol, base = None, None
+    for step in range(5):
+        if step:
+            w = _mutate_w(rng, base)
+        warm = {0: WarmStart(sol, base_problem=base)} if sol else None
+        res = (solve_warm("assignment", [w], warm)[0] if warm
+               else solve_batch("assignment", [w])[0])
+        assert int(res.weight) == optimal_weight(w), step
+        assert bool(res.converged), step
+        sol, base = kind.solution_of(res), w
+
+
+def test_matching_warm_equals_cold_over_delta_sequence():
+    rng = np.random.default_rng(2)
+    kind = get_kind("matching")
+    adj = random_bipartite(rng, 8, 7, p=0.3)
+    sol, base = None, None
+    for step in range(5):
+        if step:
+            adj = _mutate_adj(rng, base)
+        warm = {0: WarmStart(sol, base_problem=base)} if sol else None
+        res = (solve_warm("matching", [adj], warm)[0] if warm
+               else solve_batch("matching", [adj])[0])
+        assert int(res.cardinality) == hopcroft_karp(adj)[2], step
+        mr = np.asarray(res.match_row)
+        matched = mr >= 0
+        # the warm result is a VALID matching of the mutated graph
+        assert np.asarray(adj)[matched, mr[matched]].all(), step
+        assert len(set(mr[matched])) == matched.sum(), step
+        sol, base = kind.solution_of(res), adj
+
+
+def test_warm_without_base_problem_still_correct():
+    """No base_problem (unknown provenance): maxflow falls back to a cold
+    per-instance init, assignment uses the conservative eps ladder —
+    correctness must hold either way."""
+    rng = np.random.default_rng(3)
+    p = _grid(rng)
+    sol = get_kind("maxflow").solution_of(solve_batch("maxflow", [p])[0])
+    p2 = _mutate_grid(rng, p)
+    res = solve_warm("maxflow", [p2], {0: WarmStart(sol)})[0]
+    assert abs(float(res.flow) - _mf_ref(p2)) < 1e-4
+
+    w = rng.integers(0, 15, (5, 5)).astype(np.int32)
+    sol = get_kind("assignment").solution_of(
+        solve_batch("assignment", [w])[0])
+    w2 = _mutate_w(rng, w)
+    res = solve_warm("assignment", [w2], {0: WarmStart(sol)})[0]
+    assert int(res.weight) == optimal_weight(w2)
+
+
+# ------------------------------------------------- drivers agree
+
+
+def test_masked_compacted_refill_agree_on_warm_batch():
+    rng = np.random.default_rng(4)
+    kind = get_kind("maxflow")
+    bases = [_grid(rng) for _ in range(4)]
+    sols = [kind.solution_of(r) for r in solve_batch("maxflow", bases)]
+    mutated = [_mutate_grid(rng, b) for b in bases]
+    warm = {i: WarmStart(sols[i], base_problem=bases[i])
+            for i in (0, 2)}                       # mixed warm/cold batch
+    masked = solve_warm("maxflow", mutated, warm)
+    compacted = solve_warm("maxflow", mutated, warm, compact=True)
+    s = RefillSolver("maxflow", shape=(6, 7), capacity=4)
+    refill = s.run(mutated, warm=warm)
+    for i, (m, c) in enumerate(zip(masked, compacted)):
+        ref = _mf_ref(mutated[i])
+        assert abs(float(m.flow) - ref) < 1e-4, i
+        assert float(m.flow) == float(c.flow) == float(refill[i].flow), i
+        assert int(m.rounds) == int(c.rounds) == int(refill[i].rounds), i
+
+
+def test_refill_admits_warm_pairs_mid_solve():
+    rng = np.random.default_rng(5)
+    kind = get_kind("maxflow")
+    base = _grid(rng)
+    sol = kind.solution_of(solve_batch("maxflow", [base])[0])
+    p2 = _mutate_grid(rng, base)
+    fed = {"done": False}
+
+    def admit(n_free):
+        if fed["done"]:
+            return []
+        fed["done"] = True
+        return [(p2, WarmStart(sol, base_problem=base))]
+
+    s = RefillSolver("maxflow", shape=(6, 7), capacity=2)
+    out = s.run([_grid(rng)], admit=admit)
+    assert abs(float(out[1].flow) - _mf_ref(p2)) < 1e-4
+
+
+@multi
+def test_sharded_warm_matches_unsharded():
+    from repro.launch.mesh import make_solver_mesh
+    rng = np.random.default_rng(6)
+    kind = get_kind("maxflow")
+    bases = [_grid(rng, 5, 5) for _ in range(4)]
+    sols = [kind.solution_of(r) for r in solve_batch("maxflow", bases)]
+    mutated = [_mutate_grid(rng, b) for b in bases]
+    warm = {i: WarmStart(sols[i], base_problem=bases[i]) for i in range(4)}
+    plain = solve_warm("maxflow", mutated, warm)
+    for n in sorted({2, N_DEV}):
+        mesh = make_solver_mesh(n)
+        sharded = solve_warm("maxflow", mutated, warm, mesh=mesh)
+        for i, (a, b) in enumerate(zip(plain, sharded)):
+            assert float(a.flow) == float(b.flow), (n, i)
+            assert int(a.rounds) == int(b.rounds), (n, i)
+
+
+# ------------------------------------------------- delta + cache units
+
+
+def test_graph_delta_field_and_dense_forms():
+    rng = np.random.default_rng(7)
+    p = _grid(rng)
+    d = GraphDelta(idx=(np.array([3]), np.array([2]), np.array([2])),
+                   values=np.array([9.0], np.float32), field="cap_nbr")
+    p2 = apply_delta("maxflow", p, d)
+    assert float(np.asarray(p2.cap_nbr)[3, 2, 2]) == 9.0
+    # original payload is never aliased
+    assert float(np.asarray(p.cap_nbr)[3, 2, 2]) != 9.0 or True
+    w = rng.integers(0, 9, (4, 4)).astype(np.int32)
+    d = GraphDelta(idx=(np.array([1]), np.array([2])),
+                   values=np.array([7], np.int32))
+    w2 = apply_delta("assignment", w, d)
+    assert w2[1, 2] == 7 and np.asarray(w)[1, 2] == w[1, 2]
+    # a delta sequence applies in order
+    seq = [GraphDelta(idx=(np.array([0]), np.array([0])),
+                      values=np.array([5], np.int32)),
+           GraphDelta(idx=(np.array([0]), np.array([0])),
+                      values=np.array([3], np.int32))]
+    assert apply_delta("assignment", w, seq)[0, 0] == 3
+    with pytest.raises(ValueError, match="field"):
+        apply_delta("maxflow", p, GraphDelta(
+            idx=(np.array([0]),), values=np.array([1.0]), field="nope"))
+
+
+def test_delta_bound_and_content_key():
+    rng = np.random.default_rng(8)
+    w = rng.integers(0, 9, (4, 4)).astype(np.int32)
+    w2 = w.copy()
+    w2[2, 2] += 5
+    assert delta_bound(w2, w) == 5.0
+    assert delta_bound(w, w) == 0.0
+    k1, k2 = content_key("assignment", w), content_key("assignment", w2)
+    assert k1 != k2 and k1 == content_key("assignment", w.copy())
+    # kind participates in the key
+    adj = np.zeros((4, 4), bool)
+    assert content_key("matching", adj) != content_key(
+        "matching", np.zeros((4, 5), bool))
+
+
+def test_solution_cache_lru_and_budgets():
+    rng = np.random.default_rng(9)
+    cache = SolutionCache(max_entries=2)
+    ws = [rng.integers(0, 9, (4, 4)).astype(np.int32) for _ in range(3)]
+    keys = [cache.put("assignment", w, {"p_y": np.zeros(4, np.int32)})
+            for w in ws]
+    assert len(cache) == 2
+    assert cache.get(keys[0]) is None          # LRU'd out (no spill dir)
+    assert cache.get(keys[2]) is not None
+    st_ = cache.stats()
+    assert st_["hits"] == 1 and st_["misses"] == 1
+    # byte budget: sole entry is never evicted
+    tiny = SolutionCache(max_entries=8, max_bytes=1)
+    k = tiny.put("assignment", ws[0], {"p_y": np.zeros(4, np.int32)})
+    assert tiny.get(k) is not None
+
+
+def test_solution_cache_spills_and_reloads(tmp_path):
+    rng = np.random.default_rng(10)
+    cache = SolutionCache(max_entries=1, spill_dir=str(tmp_path))
+    w0 = rng.integers(0, 9, (4, 4)).astype(np.int32)
+    w1 = rng.integers(0, 9, (4, 4)).astype(np.int32)
+    k0 = cache.put("assignment", w0, {"p_y": np.arange(4, dtype=np.int32)})
+    cache.put("assignment", w1, {"p_y": np.zeros(4, np.int32)})
+    assert cache.stats()["spilled"] == 1       # k0 spilled to disk
+    assert any(d.startswith("kv_") for d in os.listdir(tmp_path))
+    hit = cache.get(k0)                        # transparently reloaded
+    assert hit is not None
+    np.testing.assert_array_equal(np.asarray(hit.solution["p_y"]),
+                                  np.arange(4))
+    # and the reloaded solution still warm-starts correctly
+    w2 = _mutate_w(rng, w0)
+    res = solve_warm("assignment", [w2],
+                     {0: WarmStart(hit.solution, base_problem=hit.problem)})
+    assert int(res[0].weight) == optimal_weight(w2)
+
+
+# ------------------------------------------------- serving seam
+
+
+def test_engine_submit_base_delta_and_metrics():
+    from repro.serve.engine import SolverEngine
+    from repro.serve.metrics import SchedulerMetrics
+    rng = np.random.default_rng(11)
+    p = _grid(rng, 5, 5)
+    m = SchedulerMetrics()
+    eng = SolverEngine(metrics=m)
+    t1 = eng.submit("maxflow", p)
+    eng.flush()
+    d = GraphDelta(idx=(np.array([3]), np.array([2]), np.array([2])),
+                   values=np.array([9.0], np.float32), field="cap_nbr")
+    t2 = eng.submit("maxflow", base=t1, delta=d)
+    r2 = eng.flush()[t2]
+    assert abs(float(r2.flow) - _mf_ref(apply_delta("maxflow", p, d))) < 1e-4
+    snap = m.snapshot()["warm"]
+    assert snap["cache_hits"] == 1 and snap["warm_solves"] == 1
+    assert snap["warm_fraction"] == 0.5        # one warm, one cold so far
+    # base by cache key; unknown base raises KeyError (caller retries cold)
+    key = eng.cache.key("maxflow", p)
+    t3 = eng.submit("maxflow", base=key, delta=d)
+    assert float(eng.flush()[t3].flow) == float(r2.flow)
+    with pytest.raises(KeyError):
+        eng.submit("maxflow", base=10_000, delta=d)
+    with pytest.raises(ValueError, match="base="):
+        eng.submit("maxflow", delta=d)
+
+
+@pytest.mark.serve
+def test_scheduler_submit_base_delta_warm_path():
+    from repro.serve.scheduler import AsyncSolverEngine
+    rng = np.random.default_rng(12)
+    p = _grid(rng, 5, 5)
+    d = GraphDelta(idx=(np.array([3]), np.array([2]), np.array([2])),
+                   values=np.array([9.0], np.float32), field="cap_nbr")
+    p2 = apply_delta("maxflow", p, d)
+    with AsyncSolverEngine(max_batch=4, max_delay_ms=10.0) as eng:
+        f1 = eng.submit("maxflow", p)
+        r1 = f1.result(timeout=120)
+        assert abs(float(r1.flow) - _mf_ref(p)) < 1e-4
+        f2 = eng.submit("maxflow", base=0, delta=d)
+        r2 = f2.result(timeout=120)
+        assert abs(float(r2.flow) - _mf_ref(p2)) < 1e-4
+        snap = eng.metrics.snapshot()["warm"]
+        assert snap["cache_hits"] >= 1 and snap["warm_solves"] >= 1
+    # same stream through the continuous-batching route
+    with AsyncSolverEngine(max_batch=2, max_delay_ms=10.0,
+                           refill=True) as eng:
+        eng.submit("maxflow", p).result(timeout=120)
+        r2 = eng.submit("maxflow", base=0, delta=d).result(timeout=120)
+        assert abs(float(r2.flow) - _mf_ref(p2)) < 1e-4
+
+
+# ------------------------------------------------- property suite
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), n_edits=st.integers(1, 8))
+def test_property_maxflow_warm_equivalence(seed, n_edits):
+    rng = np.random.default_rng(seed)
+    kind = get_kind("maxflow")
+    p = _grid(rng, 5, 6)
+    res = solve_batch("maxflow", [p])[0]
+    p2 = _mutate_grid(rng, p, n_edits=n_edits)
+    warm = solve_warm("maxflow", [p2],
+                      {0: WarmStart(kind.solution_of(res),
+                                    base_problem=p)})[0]
+    assert abs(float(warm.flow) - _mf_ref(p2)) < 1e-4
+    assert bool(check_no_violations(warm.state))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), n_edits=st.integers(1, 6))
+def test_property_assignment_warm_equivalence(seed, n_edits):
+    rng = np.random.default_rng(seed)
+    kind = get_kind("assignment")
+    w = rng.integers(0, 25, (5, 5)).astype(np.int32)
+    res = solve_batch("assignment", [w])[0]
+    w2 = _mutate_w(rng, w, n_edits=n_edits)
+    warm = solve_warm("assignment", [w2],
+                      {0: WarmStart(kind.solution_of(res),
+                                    base_problem=w)})[0]
+    assert int(warm.weight) == optimal_weight(w2)
+
+
+@pytest.mark.skipif(HAVE_HYPOTHESIS, reason="hypothesis covers this wider")
+def test_fixed_seed_warm_equivalence_sweep():
+    """Offline fallback for the property suite: a deterministic seed sweep
+    over the same delta space."""
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+        kind = get_kind("maxflow")
+        p = _grid(rng, 5, 6)
+        res = solve_batch("maxflow", [p])[0]
+        p2 = _mutate_grid(rng, p, n_edits=1 + seed % 8)
+        warm = solve_warm("maxflow", [p2],
+                          {0: WarmStart(kind.solution_of(res),
+                                        base_problem=p)})[0]
+        assert abs(float(warm.flow) - _mf_ref(p2)) < 1e-4
+
+
+# ------------------------------------------------- multi-device relaunch
+
+
+@pytest.mark.slow  # fresh 8-device process re-runs this whole file
+@pytest.mark.skipif(N_DEV >= 2, reason="already multi-device")
+def test_forced_multi_device_subprocess():
+    root = pathlib.Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " " + FORCE_FLAG).strip()
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "-x", "-q", str(__file__),
+         "-m", "not slow"],
+        cwd=root, env=env, capture_output=True, text=True, timeout=1500)
+    assert r.returncode == 0, f"\n--- stdout ---\n{r.stdout}\n{r.stderr}"
+    assert "passed" in r.stdout
